@@ -1,0 +1,28 @@
+"""Fig. 9: total resource usage per workflow × strategy (incl. ASA OH)."""
+
+from __future__ import annotations
+
+import time
+from collections import defaultdict
+
+from repro.sched.runner import run_table1
+
+
+def run(seed: int = 0):
+    t0 = time.time()
+    res = run_table1(seed=seed, include_naive=True)
+    usage = defaultdict(float)
+    for r in res.runs:
+        usage[(r.workflow, r.strategy)] += r.core_hours
+    return dict(usage), time.time() - t0
+
+
+def main():
+    usage, elapsed = run()
+    per = elapsed * 1e6 / max(len(usage), 1)
+    for (wf, strat), ch in sorted(usage.items()):
+        print(f"fig9_usage/{wf}_{strat},{per:.0f},core_hours={ch:.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,281 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""§Roofline: three-term roofline per (arch × shape) on the single-pod mesh.
+
+Methodology (CPU container, TPU v5e target — see EXPERIMENTS.md):
+  * XLA's HloCostAnalysis counts a while (scan) body ONCE, so the full
+    scanned program undercounts FLOPs by the trip count. We therefore lower
+    two UNROLLED reduced-depth variants of each cell (L_a, L_b layers, all
+    scans unrolled) and extrapolate:  cost(L) = base + L · marginal, with
+    marginal = (cost_b − cost_a) / (L_b − L_a).
+  * collective bytes come from the same unrolled per-device HLO (every
+    collective statically visible), extrapolated the same way.
+  * per-device terms (the compiled module is the per-device partitioned
+    program):
+        compute_s    = flops_dev / PEAK_FLOPS
+        memory_s     = hbm_bytes_dev / HBM_BW
+        collective_s = coll_bytes_dev / ICI_BW
+  * MODEL_FLOPS = 6·N_active·tokens (train) or 2·N_active·tokens (+KV reads
+    in the memory term) for decode; ratio MODEL/HLO flags remat/redundancy.
+
+Hardware constants (TPU v5e): 197 TF/s bf16, 819 GB/s HBM, 50 GB/s/link ICI.
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import numpy as np
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+OUT_DIR = Path(__file__).resolve().parent.parent / "experiments" / "roofline"
+DRYRUN_DIR = Path(__file__).resolve().parent.parent / "experiments" / "dryrun"
+
+
+def _aux_layers(cfg):
+    """Two reduced depths honoring structural constraints (zamba period)."""
+    if cfg.attn_every:
+        return cfg.attn_every, 2 * cfg.attn_every
+    return 2, 4
+
+
+def _reduce_layers(cfg, n, seq_len: int = 0):
+    kw = {"n_layers": n}
+    # cap UNROLLED chunk-scan length at 64 iterations: at 32k+ sequences the
+    # WKV/SSD chunk loop would otherwise unroll into hundreds of bodies and
+    # blow up CPU compile time. A larger analysis chunk slightly INFLATES the
+    # intra-chunk FLOP subterm (∝ chunk) — documented upper bound,
+    # EXPERIMENTS.md §Roofline.
+    if cfg.rwkv and seq_len:
+        c = max(cfg.rwkv.chunk, seq_len // 64)
+        kw["rwkv"] = dataclasses.replace(cfg.rwkv, chunk=c)
+    if cfg.ssm and seq_len:
+        c = max(cfg.ssm.chunk, seq_len // 64)
+        kw["ssm"] = dataclasses.replace(cfg.ssm, chunk=c)
+    return dataclasses.replace(cfg, **kw)
+
+
+def count_active_params(cfg) -> float:
+    """Matmul (>=2D) params; MoE experts weighted by top_k/E."""
+    from repro.train.step import init_params
+    from functools import partial
+    shapes = jax.eval_shape(partial(init_params, cfg=cfg),
+                            jax.random.PRNGKey(0))
+    flat, _ = jax.tree_util.tree_flatten_with_path(shapes)
+    total = 0.0
+    for path, leaf in flat:
+        p = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                     for k in path)
+        if leaf.ndim < 2 or "embed" in p:
+            continue
+        n = float(np.prod(leaf.shape))
+        if "moe/w_" in p:
+            n *= cfg.moe.top_k / cfg.moe.n_experts
+        total += n
+    return total
+
+
+def _bf16_params(p_shapes):
+    import jax.numpy as jnp
+    def conv(l):
+        if l.ndim >= 2 and l.dtype == jnp.float32:
+            return jax.ShapeDtypeStruct(l.shape, jnp.bfloat16)
+        return l
+    return jax.tree.map(conv, p_shapes)
+
+
+def lower_unrolled(cfg, shape, mesh, *, remat: str = "dots",
+                   vocab_parallel: bool = False, use_flash: bool = False,
+                   bf16_params: bool = False, kv_seq_shard: bool = False,
+                   seq_shard: bool = False):
+    """Lower+compile one unrolled cell; return (flops, bytes, coll_bytes)."""
+    from repro.launch import specs as SPECS
+    from repro.parallel.collectives import collective_stats
+    from repro.parallel.sharding import ShardingRules
+    from repro.train import optimizer as OPT
+    from repro.train.step import init_params, make_train_step
+    from repro.serve.step import make_decode_step, make_prefill_step
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from functools import partial
+
+    rules = ShardingRules(mesh)
+    p_shapes = jax.eval_shape(partial(init_params, cfg=cfg),
+                              jax.random.PRNGKey(0))
+    if bf16_params:
+        p_shapes = _bf16_params(p_shapes)
+    p_shard = rules.tree_shardings(p_shapes)
+
+    if shape.kind == "train":
+        o_shapes = jax.eval_shape(OPT.init, p_shapes)
+        o_shard = OPT.AdamWState(step=NamedSharding(mesh, P()), m=p_shard,
+                                 v=p_shard)
+        batch = SPECS.train_batch_specs(cfg, shape)
+        b_shard = SPECS.batch_shardings(batch, rules, mesh)
+        if seq_shard:
+            b_ax = (rules.fsdp
+                    if shape.global_batch % rules.n_fsdp == 0 else None)
+            from jax.sharding import NamedSharding as _NS
+            b_shard = dict(b_shard)
+            b_shard["tokens"] = _NS(mesh, P(b_ax, "model"))
+            b_shard["labels"] = _NS(mesh, P(b_ax, "model"))
+        step = make_train_step(cfg, remat=remat, unroll=True,
+                               vocab_parallel=vocab_parallel,
+                               use_flash=use_flash)
+        jitted = jax.jit(step, in_shardings=(p_shard, o_shard, b_shard),
+                         donate_argnums=(0, 1))
+        with mesh:
+            compiled = jitted.lower(p_shapes, o_shapes, batch).compile()
+    elif shape.kind == "prefill":
+        step = make_prefill_step(cfg, unroll=True, use_flash=use_flash)
+        args = SPECS.prefill_args(cfg, shape)
+        if seq_shard:
+            # context parallelism: queries sharded over `model` along S —
+            # the right axis when n_heads doesn't divide the model axis
+            b_ax = (rules.fsdp if args[0].shape[0] % rules.n_fsdp == 0
+                    else None)
+            arg_sh = (NamedSharding(mesh, P(b_ax, "model")),) + tuple(
+                NamedSharding(mesh, rules.batch_spec(a.shape[0], a.ndim))
+                for a in args[1:])
+        else:
+            arg_sh = tuple(
+                NamedSharding(mesh, rules.batch_spec(a.shape[0], a.ndim))
+                for a in args)
+        jitted = jax.jit(step, in_shardings=(p_shard,) + arg_sh)
+        with mesh:
+            compiled = jitted.lower(p_shapes, *args).compile()
+    else:
+        step = make_decode_step(cfg, unroll=True)
+        args = SPECS.decode_args(cfg, shape)
+        arg_sh = SPECS.decode_shardings(cfg, shape, rules, mesh,
+                                        kv_seq_shard=kv_seq_shard)
+        jitted = jax.jit(step, in_shardings=(p_shard,) + tuple(arg_sh),
+                         donate_argnums=(2,))
+        with mesh:
+            compiled = jitted.lower(p_shapes, *args).compile()
+
+    ca = compiled.cost_analysis()
+    coll = collective_stats(compiled.as_text())
+    return (float(ca.get("flops", 0.0)),
+            float(ca.get("bytes accessed", 0.0)),
+            float(coll["total_bytes"]),
+            coll["bytes_by_kind"])
+
+
+def analyze_cell(cfg, shape, mesh, *, remat: str = "dots",
+                 **opts) -> dict:
+    La, Lb = _aux_layers(cfg)
+    t0 = time.time()
+    S = shape.seq_len if shape.kind != "decode" else 0
+    fa, ba, ca_, kinds_a = lower_unrolled(_reduce_layers(cfg, La, S), shape,
+                                          mesh, remat=remat, **opts)
+    fb, bb, cb, kinds_b = lower_unrolled(_reduce_layers(cfg, Lb, S), shape,
+                                         mesh, remat=remat, **opts)
+    L = cfg.n_layers
+    def extrap(a, b):
+        marg = (b - a) / (Lb - La)
+        return max(a - La * marg, 0.0) + L * marg, marg
+    flops, flops_marg = extrap(fa, fb)
+    hbm, _ = extrap(ba, bb)
+    coll, _ = extrap(ca_, cb)
+    kinds = {k: extrap(kinds_a.get(k, 0), kinds_b.get(k, 0))[0]
+             for k in set(kinds_a) | set(kinds_b)}
+
+    n_act = count_active_params(cfg)
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    if shape.kind == "train":
+        model_flops = 6.0 * n_act * shape.global_batch * shape.seq_len
+    elif shape.kind == "prefill":
+        model_flops = 2.0 * n_act * shape.global_batch * shape.seq_len
+    else:
+        model_flops = 2.0 * n_act * shape.global_batch
+
+    chips = mesh.devices.size
+    compute_s = flops / PEAK_FLOPS
+    memory_s = hbm / HBM_BW
+    collective_s = coll / ICI_BW
+    dominant = max(("compute", compute_s), ("memory", memory_s),
+                   ("collective", collective_s), key=lambda kv: kv[1])[0]
+    rec = {
+        "arch": cfg.name, "shape": shape.name, "remat": remat,
+        "opts": {k: v for k, v in opts.items() if v},
+        "aux_layers": [La, Lb],
+        "flops_dev": flops, "hbm_bytes_dev": hbm,
+        "collective_bytes_dev": coll,
+        "collective_by_kind_dev": kinds,
+        "compute_s": compute_s, "memory_s": memory_s,
+        "collective_s": collective_s, "dominant": dominant,
+        "model_flops_global": model_flops,
+        "model_flops_dev": model_flops / chips,
+        "useful_ratio": (model_flops / chips) / flops if flops else 0.0,
+        "roofline_fraction": (
+            (model_flops / chips / PEAK_FLOPS)
+            / max(compute_s, memory_s, collective_s)
+            if max(compute_s, memory_s, collective_s) > 0 else 0.0),
+        "tokens_global": tokens,
+        "n_active_params": n_act,
+        "chips": chips,
+        "analysis_s": round(time.time() - t0, 1),
+    }
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--remat", default="dots")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--vocab-parallel", action="store_true")
+    ap.add_argument("--flash", action="store_true")
+    ap.add_argument("--bf16-params", action="store_true")
+    ap.add_argument("--kv-seq-shard", action="store_true")
+    ap.add_argument("--seq-shard", action="store_true")
+    args = ap.parse_args()
+    opts = dict(vocab_parallel=args.vocab_parallel, use_flash=args.flash,
+                bf16_params=args.bf16_params, kv_seq_shard=args.kv_seq_shard,
+                seq_shard=args.seq_shard)
+
+    from repro.configs import cells
+    from repro.launch.mesh import make_production_mesh
+
+    mesh = make_production_mesh(multi_pod=False)
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    todo = [(c, s) for c, s, skip in cells() if skip is None]
+    if args.arch:
+        todo = [t for t in todo if t[0].name == args.arch]
+    if args.shape:
+        todo = [t for t in todo if t[1].name == args.shape]
+    for cfg, shape in todo:
+        tag = f"__{args.tag}" if args.tag else ""
+        out = OUT_DIR / f"{cfg.name}__{shape.name}{tag}.json"
+        if out.exists():
+            print(f"cached {out.name}")
+            continue
+        print(f"analyze {cfg.name} × {shape.name} ...", flush=True)
+        try:
+            rec = analyze_cell(cfg, shape, mesh, remat=args.remat, **opts)
+            print(f"  dominant={rec['dominant']} "
+                  f"compute={rec['compute_s']*1e3:.2f}ms "
+                  f"memory={rec['memory_s']*1e3:.2f}ms "
+                  f"coll={rec['collective_s']*1e3:.2f}ms "
+                  f"roofline_frac={rec['roofline_fraction']:.3f}",
+                  flush=True)
+        except Exception as e:
+            rec = {"arch": cfg.name, "shape": shape.name, "status": "fail",
+                   "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-2500:]}
+            print(f"  FAIL {str(e)[:160]}", flush=True)
+        out.write_text(json.dumps(rec, indent=1, default=str))
+
+
+if __name__ == "__main__":
+    main()

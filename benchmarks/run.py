@@ -1,0 +1,84 @@
+"""Benchmark driver: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. The roofline benchmark
+(benchmarks.roofline) runs as its own process (it needs 512 host devices
+before jax init); this driver summarizes its JSON output if present.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+EXP = Path(__file__).resolve().parent.parent / "experiments"
+
+
+def roofline_summary() -> None:
+    rdir = EXP / "roofline"
+    if not rdir.exists():
+        print("roofline/none,0,run `python -m benchmarks.roofline` first")
+        return
+    for f in sorted(rdir.glob("*.json")):
+        r = json.loads(f.read_text())
+        if r.get("status") == "fail":
+            print(f"roofline/{f.stem},0,FAIL={r['error'][:80]}")
+            continue
+        name = f"{r['arch']}__{r['shape']}"
+        if r.get("opts"):
+            name += "__" + "-".join(sorted(r["opts"]))
+        bound_s = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        print(f"roofline/{name},{r['analysis_s']*1e6:.0f},"
+              f"dominant={r['dominant']};bound_ms={bound_s*1e3:.2f};"
+              f"frac={r['roofline_fraction']:.3f};"
+              f"useful={r['useful_ratio']:.2f}")
+
+
+def dryrun_summary() -> None:
+    ddir = EXP / "dryrun"
+    if not ddir.exists():
+        print("dryrun/none,0,run `python -m repro.launch.dryrun --all` first")
+        return
+    ok = fail = skip = 0
+    for f in sorted(ddir.glob("*.json")):
+        r = json.loads(f.read_text())
+        s = r.get("status")
+        ok += s == "ok"
+        fail += s == "fail"
+        skip += s == "skip"
+    print(f"dryrun/all_cells,0,ok={ok};fail={fail};skip={skip}")
+
+
+def main() -> None:
+    import time
+    from collections import defaultdict
+
+    from benchmarks import fig5_convergence, table2_accuracy
+    from repro.sched.runner import run_table1, summarize_table1
+
+    fig5_convergence.main()
+
+    # table1 + fig9 share one simulation campaign (54 runs + naive)
+    t0 = time.time()
+    res = run_table1(seed=0, include_naive=True)
+    elapsed = time.time() - t0
+    summary = summarize_table1(res)
+    n = len(res.runs)
+    for strat, d in sorted(summary.items()):
+        print(f"table1_strategies/{strat},{elapsed * 1e6 / max(n, 1):.0f},"
+              f"twt=+{d['twt']*100:.0f}%;makespan=+{d['makespan']*100:.0f}%;"
+              f"ch=+{d['ch']*100:.0f}%")
+    print("table1_strategies/paper_ref,0,"
+          "bigjob_ch=+53%;per_stage_makespan=+34%;asa_makespan=+2%")
+    usage = defaultdict(float)
+    for r in res.runs:
+        usage[(r.workflow, r.strategy)] += r.core_hours
+    for (wf, strat), ch in sorted(usage.items()):
+        print(f"fig9_usage/{wf}_{strat},0,core_hours={ch:.1f}")
+
+    table2_accuracy.main()
+    dryrun_summary()
+    roofline_summary()
+
+
+if __name__ == "__main__":
+    main()

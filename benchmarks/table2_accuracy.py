@@ -1,0 +1,28 @@
+"""Table 2: prediction accuracy per job geometry — real WT vs ASA WT vs
+perceived WT, hit/miss ratios, core-hour overhead losses."""
+
+from __future__ import annotations
+
+import time
+
+from repro.sched.runner import run_table2
+
+
+def run(seed: int = 0, n_submissions: int = 60):
+    t0 = time.time()
+    rows = run_table2(seed=seed, n_submissions=n_submissions)
+    return rows, time.time() - t0
+
+
+def main():
+    rows, elapsed = run(n_submissions=30)  # 30 probes/geometry for CI speed
+    per = elapsed * 1e6 / max(len(rows), 1)
+    for r in rows:
+        print(f"table2_accuracy/{r.workflow}_{r.center}_{r.scale},{per:.0f},"
+              f"real={r.real_wt_h:.2f}h;asa={r.asa_wt_h:.2f}h;"
+              f"pwt={r.pwt_h:.2f}h;hit={r.hit_ratio:.2f};"
+              f"miss={r.miss_ratio:.2f};oh={r.oh_loss_h:.1f}h")
+
+
+if __name__ == "__main__":
+    main()

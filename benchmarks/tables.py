@@ -1,0 +1,104 @@
+"""Regenerate EXPERIMENTS.md tables from experiments/*.json artifacts.
+
+    PYTHONPATH=src python -m benchmarks.tables [--section roofline|dryrun]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+EXP = Path(__file__).resolve().parent.parent / "experiments"
+
+
+def _fmt_ms(s: float) -> str:
+    return f"{s*1e3:.2f}"
+
+
+def roofline_table(tag: str | None = None) -> str:
+    rows = []
+    for f in sorted((EXP / "roofline").glob("*.json")):
+        r = json.loads(f.read_text())
+        if r.get("status") == "fail":
+            continue
+        is_tagged = "__" in f.stem.replace(
+            f"{r['arch']}__{r['shape']}", "")
+        if tag is None and r.get("opts"):
+            continue
+        if tag is not None and not r.get("opts"):
+            continue
+        rows.append(r)
+    out = ["| arch | shape | compute ms | memory ms | collective ms | "
+           "dominant | MODEL/HLO flops | roofline frac |",
+           "|---|---|---:|---:|---:|---|---:|---:|"]
+    for r in sorted(rows, key=lambda x: (x["arch"], x["shape"])):
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {_fmt_ms(r['compute_s'])} | "
+            f"{_fmt_ms(r['memory_s'])} | {_fmt_ms(r['collective_s'])} | "
+            f"{r['dominant']} | {r['useful_ratio']:.3f} | "
+            f"{r['roofline_fraction']:.4f} |")
+    return "\n".join(out)
+
+
+def dryrun_table() -> str:
+    rows = []
+    for f in sorted((EXP / "dryrun").glob("*.json")):
+        r = json.loads(f.read_text())
+        rows.append(r)
+    out = ["| arch | shape | mesh | status | compile s | temp GB (all dev) | "
+           "collectives (static) |",
+           "|---|---|---|---|---:|---:|---|"]
+    for r in rows:
+        if r["status"] == "ok":
+            temp = r.get("memory", {}).get("temp_size_in_bytes", 0) / 1e9
+            cc = r.get("collectives", {}).get("count_by_kind", {})
+            cstr = ",".join(f"{k.split('-')[-1][:4]}:{v}"
+                            for k, v in sorted(cc.items()))
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | "
+                       f"{r.get('compile_s', 0):.1f} | {temp:.1f} | {cstr} |")
+        elif r["status"] == "skip":
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                       f"SKIP | — | — | {r['reason'][:40]} |")
+        else:
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                       f"FAIL | — | — | {r.get('error', '')[:60]} |")
+    return "\n".join(out)
+
+
+def perf_compare(arch: str, shape: str) -> str:
+    """Baseline vs every tagged variant for one cell."""
+    base = None
+    variants = []
+    for f in sorted((EXP / "roofline").glob(f"{arch}__{shape}*.json")):
+        r = json.loads(f.read_text())
+        if r.get("status") == "fail":
+            continue
+        if r.get("opts"):
+            variants.append((f.stem.split("__")[-1], r))
+        else:
+            base = r
+    out = ["| variant | compute ms | memory ms | collective ms | dominant | "
+           "frac |", "|---|---:|---:|---:|---|---:|"]
+    for name, r in ([("baseline", base)] if base else []) + variants:
+        out.append(
+            f"| {name} | {_fmt_ms(r['compute_s'])} | "
+            f"{_fmt_ms(r['memory_s'])} | {_fmt_ms(r['collective_s'])} | "
+            f"{r['dominant']} | {r['roofline_fraction']:.4f} |")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--section", default="all")
+    args = ap.parse_args()
+    if args.section in ("roofline", "all"):
+        print("## Roofline (baseline)\n")
+        print(roofline_table())
+    if args.section in ("dryrun", "all"):
+        print("\n## Dry-run\n")
+        print(dryrun_table())
+
+
+if __name__ == "__main__":
+    main()

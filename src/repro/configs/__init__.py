@@ -1,0 +1,43 @@
+"""Architecture registry: --arch <id> resolves here."""
+
+from repro.configs.base import (  # noqa: F401
+    SHAPES, SHAPES_BY_NAME, EncoderCfg, ModelConfig, MoECfg, RWKVCfg,
+    ShapeSpec, SSMCfg,
+)
+
+from repro.configs.qwen3_moe_235b_a22b import CONFIG as _qwen3_moe
+from repro.configs.moonshot_v1_16b_a3b import CONFIG as _moonshot
+from repro.configs.whisper_tiny import CONFIG as _whisper
+from repro.configs.deepseek_7b import CONFIG as _deepseek
+from repro.configs.gemma_2b import CONFIG as _gemma
+from repro.configs.qwen2_0_5b import CONFIG as _qwen2
+from repro.configs.qwen1_5_4b import CONFIG as _qwen15
+from repro.configs.rwkv6_3b import CONFIG as _rwkv6
+from repro.configs.zamba2_1_2b import CONFIG as _zamba2
+from repro.configs.pixtral_12b import CONFIG as _pixtral
+
+ARCHS = {
+    c.name: c for c in (
+        _qwen3_moe, _moonshot, _whisper, _deepseek, _gemma,
+        _qwen2, _qwen15, _rwkv6, _zamba2, _pixtral,
+    )
+}
+
+
+def get_arch(name: str):
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+def cells():
+    """Every (arch × shape) dry-run cell, with skips per DESIGN.md §4."""
+    out = []
+    for cfg in ARCHS.values():
+        for shape in SHAPES:
+            if shape.name == "long_500k" and not cfg.subquadratic:
+                out.append((cfg, shape, "SKIP: full attention is quadratic; "
+                            "500k dense KV decode infeasible (DESIGN.md §4)"))
+            else:
+                out.append((cfg, shape, None))
+    return out

@@ -1,0 +1,5 @@
+"""repro.core — the paper's contribution: ASA, Algorithm 1 + analysis."""
+
+from repro.core import asa, bins, convergence, losses, regret  # noqa: F401
+from repro.core.asa import ASAState, init, observe, observe_full, step  # noqa: F401
+from repro.core.bins import M_DEFAULT, make_bins, nearest_bin  # noqa: F401

@@ -1,0 +1,190 @@
+"""ASA — Algorithm 1 (paper §3.2), as a pure-functional JAX module.
+
+The algorithm maintains a distribution ``p ∈ Δ^m`` over ``m`` candidate queue
+waiting times. A *round* (mini-batch, paper's outer loop) accumulates the
+per-action loss vector ``ℓ_t ∈ R^m``; the inner loop runs while
+``max_a ℓ_ta ≤ 1``. When a round closes, the multiplicative update
+
+    p_{t+1,a} ∝ exp(−γ_t · ℓ_ta) · p_{t,a}
+
+is applied and ``ℓ`` resets. ``γ_t`` is a non-increasing sequence (paper uses
+``e^{−γ_t ℓ}`` with convergence proven in Appendix A for bounded round
+losses; we default to γ=1.0 and expose a 1/sqrt schedule).
+
+Everything here is jit-able, vmap-able (a fleet of per-job-geometry
+estimators is one batched array program — paper §4.3 keeps one shared state
+per geometry), and scan-able (the Fig.-5 convergence simulation drives
+``step`` under ``lax.scan``).
+
+State is carried in log-space for numerical robustness over millions of
+multiplicative updates.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class ASAState(NamedTuple):
+    """Functional state of one ASA estimator."""
+
+    log_p: jax.Array      # (m,) log of the action distribution
+    round_loss: jax.Array  # (m,) ℓ_t accumulated inside the current round
+    rounds: jax.Array     # ()  η(t): number of completed rounds
+    t: jax.Array          # ()  total number of cases seen
+    key: jax.Array        # PRNG key for action sampling
+
+    @property
+    def p(self) -> jax.Array:
+        return jnp.exp(self.log_p)
+
+
+def init(m: int, key: jax.Array) -> ASAState:
+    """Initialise ``p_0 = 1/m`` (Algorithm 1, Require line)."""
+    return ASAState(
+        log_p=jnp.full((m,), -jnp.log(m), dtype=jnp.float32),
+        round_loss=jnp.zeros((m,), dtype=jnp.float32),
+        rounds=jnp.zeros((), dtype=jnp.int32),
+        t=jnp.zeros((), dtype=jnp.int32),
+        key=key,
+    )
+
+
+def gamma_constant(t: jax.Array, value: float = 1.0) -> jax.Array:
+    return jnp.asarray(value, dtype=jnp.float32)
+
+
+def gamma_sqrt(t: jax.Array, m: int, scale: float = 1.0) -> jax.Array:
+    """Non-increasing γ_t = scale · sqrt(ln m / (t+1)) — Appendix-A friendly."""
+    t = t.astype(jnp.float32)
+    return scale * jnp.sqrt(jnp.log(float(m)) / (t + 1.0))
+
+
+def sample_action(state: ASAState) -> tuple[ASAState, jax.Array]:
+    """Line 4: sample an action index ``a ~ p_t``."""
+    key, sub = jax.random.split(state.key)
+    a = jax.random.categorical(sub, state.log_p)
+    return state._replace(key=key), a
+
+
+def greedy_action(state: ASAState) -> jax.Array:
+    """Greedy policy (Fig. 5 red line): always the current best action."""
+    return jnp.argmax(state.log_p)
+
+
+def _renormalize(log_p: jax.Array) -> jax.Array:
+    return log_p - jax.nn.logsumexp(log_p)
+
+
+def apply_round_update(state: ASAState, gamma: jax.Array) -> ASAState:
+    """Line 7: p ← e^{−γ ℓ} p / N, reset ℓ, close the round."""
+    log_p = _renormalize(state.log_p - gamma * state.round_loss)
+    return state._replace(
+        log_p=log_p,
+        round_loss=jnp.zeros_like(state.round_loss),
+        rounds=state.rounds + 1,
+    )
+
+
+def observe(
+    state: ASAState,
+    action: jax.Array,
+    loss: jax.Array,
+    gamma: jax.Array,
+) -> ASAState:
+    """Lines 5–7: accumulate ℓ_ta ← ℓ_ta + ℓ(a); close the round when
+    ``max_a ℓ_ta > 1`` (the inner `while` guard fails)."""
+    round_loss = state.round_loss.at[action].add(loss.astype(jnp.float32))
+    state = state._replace(round_loss=round_loss, t=state.t + 1)
+    round_over = jnp.max(round_loss) > 1.0
+    return jax.lax.cond(
+        round_over,
+        lambda s: apply_round_update(s, gamma),
+        lambda s: s,
+        state,
+    )
+
+
+def observe_full(
+    state: ASAState,
+    loss_vector: jax.Array,
+    gamma: jax.Array,
+    repetitions: int = 1,
+) -> ASAState:
+    """Tuned policy (§4.5): the *perceived* waiting time is used to
+    "randomly and repeatedly adjust the probability distribution p with the
+    calculated losses". We apply the full-information loss vector
+    ``repetitions`` times (paper tunes repetitions = 50), which sharpens p
+    around the last observation while the exp-form keeps every action's
+    probability strictly positive (exploration is never extinguished)."""
+    upd = gamma * loss_vector.astype(jnp.float32) * float(repetitions)
+    log_p = _renormalize(state.log_p - upd)
+    return state._replace(
+        log_p=log_p,
+        t=state.t + 1,
+        rounds=state.rounds + 1,
+    )
+
+
+def expected_wait(state: ASAState, bins: jax.Array) -> jax.Array:
+    """Posterior-mean waiting-time estimate ⟨p, θ⟩ (used for reporting)."""
+    return jnp.dot(state.p, bins.astype(jnp.float32))
+
+
+def map_wait(state: ASAState, bins: jax.Array) -> jax.Array:
+    """Maximum-a-posteriori estimate (the bin ASA would act on greedily)."""
+    return bins[jnp.argmax(state.log_p)]
+
+
+# ---------------------------------------------------------------------------
+# Convenience single-step drivers (used by lax.scan simulations and the
+# campaign scheduler).  The 0/1 loss of eq. (3) lives in losses.py; these
+# drivers accept a precomputed per-action loss vector so any loss plugs in.
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("policy", "repetitions"))
+def step(
+    state: ASAState,
+    loss_vector: jax.Array,
+    gamma: jax.Array,
+    *,
+    policy: str = "default",
+    repetitions: int = 50,
+) -> tuple[ASAState, jax.Array]:
+    """One ASA decision: pick an action, incur its loss, learn.
+
+    Returns (new_state, chosen_action). ``loss_vector`` is the (m,) loss each
+    action *would* incur for this case — the bandit policies only look at the
+    chosen entry, the tuned policy uses the full vector (it has observed the
+    true wait after the fact, which is exactly the information a submitted
+    job's completion reveals).
+    """
+    if policy == "greedy":
+        a = greedy_action(state)
+        state = observe(state, a, loss_vector[a], gamma)
+    elif policy == "default":
+        state, a = sample_action(state)
+        state = observe(state, a, loss_vector[a], gamma)
+    elif policy == "tuned":
+        state, a = sample_action(state)
+        state = observe(state, a, loss_vector[a], gamma)
+        state = observe_full(state, loss_vector, gamma / 50.0, repetitions)
+    else:  # pragma: no cover - guarded by static arg
+        raise ValueError(f"unknown policy {policy!r}")
+    return state, a
+
+
+def init_batch(m: int, n: int, key: jax.Array) -> ASAState:
+    """A fleet of ``n`` independent estimators (one per job geometry)."""
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: init(m, k))(keys)
+
+
+batched_step = jax.vmap(
+    lambda s, lv, g: step(s, lv, g), in_axes=(0, 0, None), out_axes=(0, 0)
+)

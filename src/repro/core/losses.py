@@ -1,0 +1,54 @@
+"""Loss functions scored against the true queue waiting time.
+
+Eq. (3) of the paper: ℓ_y(a) = 0 if the sampled action is the *best possible*
+alternative (closest to the true wait) among the m candidates, 1 otherwise.
+
+Beyond-paper shaped losses are provided for the sensitivity study: they award
+partial credit by distance in log-wait space, and an asymmetric variant that
+penalizes under-estimation (job not ready ⇒ makespan grows) harder than
+over-estimation (resources idle ⇒ bounded core-hour OH, paper §2.3).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def zero_one(bins: jax.Array, true_wait: jax.Array) -> jax.Array:
+    """Eq. (3): (m,) vector with 0 at the closest-to-truth bin, 1 elsewhere."""
+    d = jnp.abs(jnp.log(bins) - jnp.log(jnp.maximum(true_wait, 1e-9)))
+    best = jnp.argmin(d)
+    return jnp.where(jnp.arange(bins.shape[0]) == best, 0.0, 1.0)
+
+
+def log_distance(bins: jax.Array, true_wait: jax.Array) -> jax.Array:
+    """Shaped loss in [0,1]: normalized |log a − log w|. Beyond-paper."""
+    d = jnp.abs(jnp.log(bins) - jnp.log(jnp.maximum(true_wait, 1e-9)))
+    return jnp.clip(d / jnp.log(bins[-1] / bins[0]), 0.0, 1.0)
+
+
+def asymmetric(
+    bins: jax.Array,
+    true_wait: jax.Array,
+    under_weight: float = 1.0,
+    over_weight: float = 0.5,
+) -> jax.Array:
+    """Beyond-paper: under-estimation (a < w ⇒ the next stage is NOT ready
+    when the current one drains ⇒ full makespan hit) weighted above
+    over-estimation (a > w ⇒ allocation idles, bounded OH cost)."""
+    logb = jnp.log(bins)
+    logw = jnp.log(jnp.maximum(true_wait, 1e-9))
+    d = logb - logw
+    scale = jnp.log(bins[-1] / bins[0])
+    shaped = jnp.where(
+        d < 0, under_weight * (-d) / scale, over_weight * d / scale
+    )
+    return jnp.clip(shaped, 0.0, 1.0)
+
+
+LOSSES = {
+    "zero_one": zero_one,
+    "log_distance": log_distance,
+    "asymmetric": asymmetric,
+}

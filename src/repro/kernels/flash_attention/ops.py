@@ -1,0 +1,24 @@
+"""jit'd public wrapper for the flash-attention kernel.
+
+On TPU this runs the Pallas kernel; everywhere else (this CPU container,
+including the dry-run) it transparently uses interpret mode for tests or
+the jnp reference for speed.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention import ref
+from repro.kernels.flash_attention.kernel import flash_attention as _kernel
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    force_interpret: bool = False):
+    on_tpu = jax.default_backend() == "tpu"
+    if on_tpu or force_interpret:
+        return _kernel(q, k, v, causal=causal, window=window,
+                       block_q=block_q, block_k=block_k,
+                       interpret=not on_tpu)
+    return ref.attention_ref(q, k, v, causal=causal, window=window)

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q,k,v: (B, S, H, hd) -> (B, S, H, hd). Full-precision softmax."""
+    hd = q.shape[-1]
+    logits = jnp.einsum("bqhk,bshk->bhqs", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(hd)
+    sq, sk = q.shape[1], k.shape[1]
+    qpos = jnp.arange(sq)
+    kpos = jnp.arange(sk)
+    mask = jnp.ones((sq, sk), dtype=bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    w = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqs,bshk->bqhk", w, v.astype(jnp.float32)
+                      ).astype(q.dtype)

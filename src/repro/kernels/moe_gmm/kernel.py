@@ -1,0 +1,66 @@
+"""Grouped expert matmul (the MoE hot spot) as a tiled Pallas TPU kernel.
+
+One grid row per (expert, token-tile, out-tile); the contraction (D) axis is
+the innermost grid dim with an f32 VMEM accumulator, so each (bc × bf) MXU
+tile is revisited across D steps — the TPU analogue of a CUDA split-K loop,
+with BlockSpecs pinning every operand tile in VMEM. Tile defaults
+(128×128×512) are MXU-aligned and keep the working set
+(bc·bd + bd·bf + bc·bf floats) well under VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gmm_kernel(x_ref, w_ref, o_ref, acc_ref, *, num_d: int):
+    di = pl.program_id(3)
+
+    @pl.when(di == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[0].astype(jnp.float32)   # (bc, bd)
+    w = w_ref[0].astype(jnp.float32)   # (bd, bf)
+    acc_ref[...] += jax.lax.dot(x, w)
+
+    @pl.when(di == num_d - 1)
+    def _finish():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "block_c", "block_f", "block_d", "interpret"))
+def grouped_matmul(x: jax.Array, w: jax.Array, *,
+                   block_c: int = 128, block_f: int = 512,
+                   block_d: int = 512, interpret: bool = False) -> jax.Array:
+    """x: (E, C, D) @ w: (E, D, F) -> (E, C, F), expert-wise."""
+    E, C, D = x.shape
+    _, _, F = w.shape
+    block_c = min(block_c, C)
+    block_f = min(block_f, F)
+    block_d = min(block_d, D)
+    assert C % block_c == 0 and F % block_f == 0 and D % block_d == 0
+    num_d = D // block_d
+
+    kernel = functools.partial(_gmm_kernel, num_d=num_d)
+    return pl.pallas_call(
+        kernel,
+        grid=(E, C // block_c, F // block_f, num_d),
+        in_specs=[
+            pl.BlockSpec((1, block_c, block_d),
+                         lambda e, ci, fi, di: (e, ci, di)),
+            pl.BlockSpec((1, block_d, block_f),
+                         lambda e, ci, fi, di: (e, di, fi)),
+        ],
+        out_specs=pl.BlockSpec((1, block_c, block_f),
+                               lambda e, ci, fi, di: (e, ci, fi)),
+        out_shape=jax.ShapeDtypeStruct((E, C, F), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_c, block_f), jnp.float32)],
+        interpret=interpret,
+    )(x, w)

@@ -1,0 +1,26 @@
+"""jit'd public wrapper: grouped expert FFN built on the Pallas GMM."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.moe_gmm import ref
+from repro.kernels.moe_gmm.kernel import grouped_matmul as _gmm
+
+
+def grouped_matmul(x, w, *, force_interpret: bool = False):
+    on_tpu = jax.default_backend() == "tpu"
+    if on_tpu or force_interpret:
+        return _gmm(x, w, interpret=not on_tpu)
+    return ref.grouped_matmul_ref(x, w)
+
+
+def grouped_ffn(eb, w_gate, w_up, w_down, *, mlp: str = "swiglu",
+                force_interpret: bool = False):
+    act = jax.nn.silu if mlp == "swiglu" else (
+        lambda u: jax.nn.gelu(u, approximate=True))
+    g = act(grouped_matmul(eb, w_gate, force_interpret=force_interpret))
+    u = grouped_matmul(eb, w_up, force_interpret=force_interpret)
+    return grouped_matmul((g * u).astype(eb.dtype), w_down,
+                          force_interpret=force_interpret)

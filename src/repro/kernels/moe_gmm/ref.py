@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the grouped expert FFN."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def grouped_ffn_ref(eb, w_gate, w_up, w_down, *, mlp: str = "swiglu"):
+    """eb: (E, C, D); w_gate/w_up: (E, D, F); w_down: (E, F, D)."""
+    act = jax.nn.silu if mlp == "swiglu" else (
+        lambda u: jax.nn.gelu(u, approximate=True))
+    g = act(jnp.einsum("ecd,edf->ecf", eb, w_gate.astype(eb.dtype)))
+    u = jnp.einsum("ecd,edf->ecf", eb, w_up.astype(eb.dtype))
+    return jnp.einsum("ecf,efd->ecd", g * u, w_down.astype(eb.dtype))
+
+
+def grouped_matmul_ref(x, w):
+    """x: (E, C, D), w: (E, D, F) -> (E, C, F)."""
+    return jnp.einsum("ecd,edf->ecf", x, w.astype(x.dtype))

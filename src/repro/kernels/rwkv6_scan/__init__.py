@@ -1,0 +1,1 @@
+from repro.kernels.rwkv6_scan import ops, ref  # noqa: F401

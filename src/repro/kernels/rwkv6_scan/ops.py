@@ -1,0 +1,36 @@
+"""jit'd public wrapper for the chunked WKV6 kernel.
+
+Handles a nonzero carried state by linearity: the kernel runs from zero
+state, then the state0 contribution (a per-step decayed readout) and the
+final-state fold-in are added outside — exact, and keeps the kernel simple.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rwkv6_scan.kernel import wkv6 as _kernel
+
+
+def wkv6(r, k, v, w, u, *, chunk: int = 64, state0=None,
+         force_interpret: bool = False):
+    on_tpu = jax.default_backend() == "tpu"
+    if not (on_tpu or force_interpret):
+        # jnp fallback used on CPU: the chunked reference in models.rwkv6
+        from repro.models.rwkv6 import wkv_chunked
+        return wkv_chunked(r, k, v, w, u, chunk=chunk, state0=state0)
+
+    out, state = _kernel(r, k, v, w, u, chunk=chunk,
+                         interpret=not on_tpu)
+    if state0 is not None:
+        logw = jnp.log(jnp.clip(w.astype(jnp.float32), 1e-12, 1.0))
+        cum = jnp.cumsum(logw, axis=1)               # (B,S,H,K) inclusive
+        cum_excl = cum - logw
+        r_dec = r.astype(jnp.float32) * jnp.exp(cum_excl)
+        extra = jnp.einsum("bshk,bhkv->bshv", r_dec,
+                           state0.astype(jnp.float32))
+        out = (out.astype(jnp.float32) + extra).astype(out.dtype)
+        total = jnp.exp(cum[:, -1])                  # (B,H,K)
+        state = state + total[..., None] * state0.astype(jnp.float32)
+    return out, state

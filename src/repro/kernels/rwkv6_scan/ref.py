@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the chunked WKV6 kernel: the naive sequential
+recurrence (slow, exact)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_ref(r, k, v, w, u, state0=None):
+    """r,k,v,w: (B,S,H,K); u: (H,K). Returns (out (B,S,H,K), state (B,H,K,K)).
+
+    o_t = r_t · (S_{t-1} + u ⊙ k_t ⊗ v_t);  S_t = diag(w_t) S_{t-1} + k_t ⊗ v_t
+    """
+    B, S, H, K = r.shape
+    state = (jnp.zeros((B, H, K, K), jnp.float32) if state0 is None
+             else state0.astype(jnp.float32))
+
+    def step(state, inp):
+        rt, kt, vt, wt = (a.astype(jnp.float32) for a in inp)
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        out = jnp.einsum(
+            "bhk,bhkv->bhv", rt,
+            state + u.astype(jnp.float32)[None, :, :, None] * kv)
+        new_state = wt[..., None] * state + kv
+        return new_state, out
+
+    inputs = tuple(jnp.moveaxis(a, 1, 0) for a in (r, k, v, w))
+    state, outs = jax.lax.scan(step, state, inputs)
+    return jnp.moveaxis(outs, 0, 1).astype(r.dtype), state

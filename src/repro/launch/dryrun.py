@@ -1,0 +1,199 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this produces a JSON record under experiments/dryrun/:
+  * compile success/failure (THE multi-pod deliverable),
+  * compiled.memory_analysis() — proves the cell fits per-device HBM,
+  * compiled.cost_analysis()  — FLOPs/bytes (while-bodies counted once;
+    benchmarks/roofline.py corrects with unrolled marginal lowers),
+  * per-HLO collective inventory (kind → bytes/count) for the §Roofline
+    collective term.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-0.5b \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+
+import argparse
+import json
+import time
+import traceback
+from functools import partial
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS, SHAPES_BY_NAME, cells
+from repro.launch import specs as SPECS
+from repro.launch.mesh import make_production_mesh
+from repro.parallel.collectives import collective_stats
+from repro.parallel.sharding import ShardingRules
+from repro.train import optimizer as OPT
+from repro.train.step import init_params, make_train_step
+from repro.serve.step import make_decode_step, make_prefill_step
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def param_shapes(cfg):
+    return jax.eval_shape(partial(init_params, cfg=cfg), jax.random.PRNGKey(0))
+
+
+def _ns(mesh, spec):
+    return NamedSharding(mesh, spec)
+
+
+def lower_cell(cfg, shape, mesh, mesh_name: str, *, remat: str = "dots",
+               accum: int = 1) -> dict:
+    rec = {
+        "arch": cfg.name, "shape": shape.name, "mesh": mesh_name,
+        "kind": shape.kind, "remat": remat, "accum": accum,
+        "status": "pending",
+    }
+    t0 = time.time()
+    rules = ShardingRules(mesh)
+    p_shapes = param_shapes(cfg)
+    p_shard = rules.tree_shardings(p_shapes)
+
+    if shape.kind == "train":
+        o_shapes = jax.eval_shape(OPT.init, p_shapes)
+        o_shard = OPT.AdamWState(step=_ns(mesh, P()), m=p_shard, v=p_shard)
+        batch = SPECS.train_batch_specs(cfg, shape)
+        b_shard = SPECS.batch_shardings(batch, rules, mesh)
+        step = make_train_step(cfg, accum=accum, remat=remat)
+        scalar = _ns(mesh, P())
+        jitted = jax.jit(
+            step,
+            in_shardings=(p_shard, o_shard, b_shard),
+            out_shardings=(p_shard, o_shard,
+                           {"loss": scalar, "grad_norm": scalar}),
+            donate_argnums=(0, 1),
+        )
+        with mesh:
+            lowered = jitted.lower(p_shapes, o_shapes, batch)
+    elif shape.kind == "prefill":
+        step = make_prefill_step(cfg)
+        args = SPECS.prefill_args(cfg, shape)
+        arg_sh = tuple(
+            _ns(mesh, rules.batch_spec(a.shape[0], a.ndim)) for a in args)
+        jitted = jax.jit(step, in_shardings=(p_shard,) + arg_sh)
+        with mesh:
+            lowered = jitted.lower(p_shapes, *args)
+    else:  # decode
+        step = make_decode_step(cfg)
+        args = SPECS.decode_args(cfg, shape)
+        arg_sh = SPECS.decode_shardings(cfg, shape, rules, mesh)
+        jitted = jax.jit(step, in_shardings=(p_shard,) + tuple(arg_sh),
+                         donate_argnums=(2,))
+        with mesh:
+            lowered = jitted.lower(p_shapes, *args)
+
+    rec["lower_s"] = round(time.time() - t0, 1)
+    t1 = time.time()
+    with mesh:
+        compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t1, 1)
+
+    try:
+        ma = compiled.memory_analysis()
+        rec["memory"] = {
+            k: getattr(ma, k)
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes",
+                      "alias_size_in_bytes")
+            if hasattr(ma, k)
+        }
+    except Exception as e:  # CPU backend may not implement it
+        rec["memory"] = {"error": str(e)[:200]}
+    try:
+        ca = compiled.cost_analysis()
+        rec["cost"] = {k: ca[k] for k in ("flops", "bytes accessed")
+                       if k in ca}
+    except Exception as e:
+        rec["cost"] = {"error": str(e)[:200]}
+    try:
+        rec["collectives"] = collective_stats(compiled.as_text())
+    except Exception:
+        rec["collectives"] = collective_stats(lowered.as_text())
+    rec["n_devices"] = mesh.devices.size
+    rec["status"] = "ok"
+    rec["total_s"] = round(time.time() - t0, 1)
+    return rec
+
+
+def run_cells(cell_list, mesh_names, out_dir: Path, remat: str = "dots"):
+    out_dir.mkdir(parents=True, exist_ok=True)
+    meshes = {}
+    results = []
+    for name in mesh_names:
+        meshes[name] = make_production_mesh(multi_pod=(name == "multi"))
+    for cfg, shape, skip in cell_list:
+        for mesh_name, mesh in meshes.items():
+            out_path = out_dir / f"{cfg.name}__{shape.name}__{mesh_name}.json"
+            if skip:
+                rec = {"arch": cfg.name, "shape": shape.name,
+                       "mesh": mesh_name, "status": "skip", "reason": skip}
+            elif out_path.exists():
+                print(f"cached  {out_path.name}")
+                continue
+            else:
+                print(f"lower   {cfg.name} × {shape.name} × {mesh_name} ...",
+                      flush=True)
+                try:
+                    rec = lower_cell(cfg, shape, mesh, mesh_name, remat=remat)
+                    print(f"  ok    lower {rec['lower_s']}s "
+                          f"compile {rec['compile_s']}s", flush=True)
+                except Exception as e:
+                    rec = {"arch": cfg.name, "shape": shape.name,
+                           "mesh": mesh_name, "status": "fail",
+                           "error": f"{type(e).__name__}: {e}",
+                           "traceback": traceback.format_exc()[-3000:]}
+                    print(f"  FAIL  {type(e).__name__}: {str(e)[:160]}",
+                          flush=True)
+            out_path.write_text(json.dumps(rec, indent=1, default=str))
+            results.append(rec)
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both", choices=["single", "multi",
+                                                       "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--remat", default="dots")
+    ap.add_argument("--out", default=str(OUT_DIR))
+    args = ap.parse_args()
+
+    mesh_names = (["single", "multi"] if args.mesh == "both"
+                  else [args.mesh])
+    all_cells = cells()
+    # cheap-first ordering: surface systematic failures before the giants
+    cost_rank = {"whisper-tiny": 0, "qwen2-0.5b": 1, "gemma-2b": 2,
+                 "zamba2-1.2b": 3, "rwkv6-3b": 4, "qwen1.5-4b": 5,
+                 "deepseek-7b": 6, "moonshot-v1-16b-a3b": 7,
+                 "pixtral-12b": 8, "qwen3-moe-235b-a22b": 9}
+    all_cells.sort(key=lambda c: (cost_rank.get(c[0].name, 99),
+                                  c[1].seq_len * c[1].global_batch))
+    if not args.all:
+        if args.arch:
+            all_cells = [c for c in all_cells if c[0].name == args.arch]
+        if args.shape:
+            all_cells = [c for c in all_cells if c[1].name == args.shape]
+    results = run_cells(all_cells, mesh_names, Path(args.out),
+                        remat=args.remat)
+    ok = sum(1 for r in results if r.get("status") == "ok")
+    fail = sum(1 for r in results if r.get("status") == "fail")
+    skip = sum(1 for r in results if r.get("status") == "skip")
+    print(f"\ndone: {ok} ok, {fail} fail, {skip} skip")
+    return 1 if fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,129 @@
+"""Batched serving driver: prefill a batch of prompts, decode greedily.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --reduced \
+      --batch 4 --prompt-len 32 --gen 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS
+from repro.serve.step import greedy_sample, make_decode_step, make_prefill_step
+from repro.train.step import init_params
+
+
+def serve(arch: str, *, reduced: bool = True, batch: int = 4,
+          prompt_len: int = 32, gen: int = 16, seed: int = 0) -> dict:
+    cfg = ARCHS[arch]
+    if reduced:
+        cfg = cfg.reduced()
+    key = jax.random.PRNGKey(seed)
+    params = init_params(key, cfg)
+    max_seq = prompt_len + gen
+    prompts = jax.random.randint(key, (batch, prompt_len), 0,
+                                 cfg.vocab_size, dtype=jnp.int32)
+
+    fam = cfg.family
+    prefill = jax.jit(make_prefill_step(cfg))
+    decode = jax.jit(make_decode_step(cfg))
+    t0 = time.time()
+    extras = ()
+    if fam == "audio":
+        frames = jax.random.normal(
+            key, (batch, cfg.encoder.n_frames, cfg.d_model),
+            dtype=jnp.dtype(cfg.dtype))
+        extras = (frames,)
+    if fam == "vlm":
+        patches = jax.random.normal(
+            key, (batch, 8, cfg.d_model), dtype=jnp.dtype(cfg.dtype))
+        extras = (patches,)
+
+    generated = []
+    if fam in ("dense", "moe"):
+        from repro.models.transformer import init_kv_caches, prefill as _pf
+        logits, pf_caches = _pf(params, prompts, cfg)
+        caches = init_kv_caches(cfg, batch, max_seq)
+        caches = jax.tree.map(
+            lambda c, p: jax.lax.dynamic_update_slice_in_dim(
+                c, p.astype(c.dtype), 0, axis=2), caches, pf_caches)
+        token = greedy_sample(logits)
+        for i in range(gen):
+            generated.append(token)
+            logits, caches = decode(params, token,
+                                    caches, jnp.int32(prompt_len + i))
+            token = greedy_sample(logits)
+    elif fam == "ssm":
+        from repro.models import rwkv6 as R
+        state = R.init_decode_state(cfg, batch)
+        # prefill by stepping the recurrence over the prompt (O(S))
+        logits = None
+        for t in range(prompt_len):
+            logits, state = decode(params, prompts[:, t:t + 1], state)
+        token = greedy_sample(logits)
+        for i in range(gen):
+            generated.append(token)
+            logits, state = decode(params, token, state)
+            token = greedy_sample(logits)
+    elif fam == "hybrid":
+        from repro.models import zamba2 as Z
+        state = Z.init_decode_state(cfg, batch, max_seq)
+        logits = None
+        for t in range(prompt_len):
+            logits, state = decode(params, prompts[:, t:t + 1], state,
+                                   jnp.int32(t))
+        token = greedy_sample(logits)
+        for i in range(gen):
+            generated.append(token)
+            logits, state = decode(params, token, state,
+                                   jnp.int32(prompt_len + i))
+            token = greedy_sample(logits)
+    else:  # audio / vlm: prefill-only path for the example driver
+        logits = prefill(params, prompts, *extras)
+        token = greedy_sample(logits)
+        if fam == "audio":
+            from repro.models import encdec as E
+            caches = E.init_kv_caches(cfg, batch, max_seq)
+            from repro.models.encdec import encode, precompute_cross_kv
+            enc = encode(params, extras[0], cfg)
+            xk, xv = precompute_cross_kv(params, enc, cfg)
+            caches["xk"], caches["xv"] = xk, xv
+            for i in range(gen):
+                generated.append(token)
+                logits, caches = decode(params, token, caches,
+                                        jnp.int32(prompt_len + i))
+                token = greedy_sample(logits)
+        else:
+            from repro.models.transformer import init_kv_caches
+            caches = init_kv_caches(cfg, batch, max_seq)
+            for i in range(gen):
+                generated.append(token)
+                logits, caches = decode(params, token, caches,
+                                        jnp.int32(prompt_len + i))
+                token = greedy_sample(logits)
+    out = jnp.concatenate(generated, axis=1) if generated else None
+    dt = time.time() - t0
+    return {"tokens": out, "elapsed_s": dt,
+            "tok_per_s": (batch * gen) / dt if gen else 0.0}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=sorted(ARCHS))
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args()
+    res = serve(args.arch, reduced=args.reduced, batch=args.batch,
+                prompt_len=args.prompt_len, gen=args.gen)
+    print(f"generated {res['tokens'].shape if res['tokens'] is not None else 0}"
+          f" in {res['elapsed_s']:.1f}s ({res['tok_per_s']:.1f} tok/s)")
+
+
+if __name__ == "__main__":
+    main()

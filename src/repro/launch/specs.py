@@ -1,0 +1,139 @@
+"""ShapeDtypeStruct input stand-ins + shardings for every dry-run cell.
+
+``input_specs(cfg, shape)`` returns (args, build_in_shardings) where args is
+the tuple of ShapeDtypeStructs fed to ``jit(...).lower`` AFTER params and
+optimizer state — no device allocation anywhere (the shannon/kernels
+pattern: weak-type-correct, shardable stand-ins).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.parallel.sharding import ShardingRules
+
+I32 = jnp.int32
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    batch = {"tokens": _sds((B, S), I32), "labels": _sds((B, S), I32)}
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.family == "audio":
+        batch["frames"] = _sds((B, cfg.encoder.n_frames, cfg.d_model), dt)
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = _sds((B, cfg.encoder.n_frames, cfg.d_model), dt)
+    return batch
+
+
+def batch_shardings(batch, rules: ShardingRules, mesh) -> dict:
+    out = {}
+    for k, v in batch.items():
+        out[k] = NamedSharding(mesh, rules.batch_spec(v.shape[0], v.ndim))
+    return out
+
+
+def prefill_args(cfg: ModelConfig, shape: ShapeSpec):
+    B, S = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    args = [_sds((B, S), I32)]
+    if cfg.family == "audio":
+        args.append(_sds((B, cfg.encoder.n_frames, cfg.d_model), dt))
+    if cfg.family == "vlm":
+        args.append(_sds((B, cfg.encoder.n_frames, cfg.d_model), dt))
+    return tuple(args)
+
+
+def decode_args(cfg: ModelConfig, shape: ShapeSpec):
+    """(token, caches/state[, index]) stand-ins for one decode step with a
+    seq_len-deep cache."""
+    B, S = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    token = _sds((B, 1), I32)
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        kv = (cfg.n_layers, B, S, cfg.n_kv_heads, cfg.hd)
+        caches = {"k": _sds(kv, dt), "v": _sds(kv, dt)}
+        return (token, caches, _sds((), I32))
+    if fam == "audio":
+        kv = (cfg.n_layers, B, S, cfg.n_kv_heads, cfg.hd)
+        xk = (cfg.n_layers, B, cfg.encoder.n_frames, cfg.n_kv_heads, cfg.hd)
+        caches = {"k": _sds(kv, dt), "v": _sds(kv, dt),
+                  "xk": _sds(xk, dt), "xv": _sds(xk, dt)}
+        return (token, caches, _sds((), I32))
+    if fam == "ssm":
+        from repro.models.rwkv6 import n_heads
+        H, K = n_heads(cfg), cfg.rwkv.head_dim
+        state = {
+            "tm_shift": _sds((cfg.n_layers, B, 1, cfg.d_model), dt),
+            "cm_shift": _sds((cfg.n_layers, B, 1, cfg.d_model), dt),
+            "wkv": _sds((cfg.n_layers, B, H, K, K), jnp.float32),
+        }
+        return (token, state)
+    if fam == "hybrid":
+        from repro.models.zamba2 import dims
+        d_inner, H, Pd, N = dims(cfg)
+        n_attn = cfg.n_layers // max(cfg.attn_every, 1)
+        cache_len = min(cfg.sliding_window or S, S)
+        state = {
+            "conv": _sds((cfg.n_layers, B, cfg.ssm.conv_width - 1, d_inner), dt),
+            "ssm": _sds((cfg.n_layers, B, H, N, Pd), jnp.float32),
+            "attn_k": _sds((max(n_attn, 1), B, cache_len,
+                            cfg.n_kv_heads, cfg.hd), dt),
+            "attn_v": _sds((max(n_attn, 1), B, cache_len,
+                            cfg.n_kv_heads, cfg.hd), dt),
+        }
+        return (token, state, _sds((), I32))
+    raise ValueError(fam)
+
+
+def decode_shardings(cfg: ModelConfig, shape: ShapeSpec,
+                     rules: ShardingRules, mesh, *,
+                     kv_seq_shard: bool = False):
+    B = shape.global_batch
+    fam = cfg.family
+    tok = NamedSharding(mesh, rules.batch_spec(B, 2))
+    if kv_seq_shard and fam in ("dense", "moe", "vlm", "audio"):
+        # flash-decoding-style: shard the cache SEQUENCE over the model
+        # axis (softmax partials combined by SPMD-inserted all-reduces) —
+        # the right layout when kv_heads < model-axis size.
+        b_ax = rules.fsdp if (rules.fsdp and B % rules.n_fsdp == 0) else None
+        kv_spec = NamedSharding(mesh, P(None, b_ax, "model", None, None))
+    else:
+        kv_spec = NamedSharding(
+            mesh, rules.kv_cache_spec(B, cfg.n_kv_heads, stacked=True))
+    if fam in ("dense", "moe", "vlm"):
+        return (tok, {"k": kv_spec, "v": kv_spec},
+                NamedSharding(mesh, P()))
+    if fam == "audio":
+        return (tok, {k: kv_spec for k in ("k", "v", "xk", "xv")},
+                NamedSharding(mesh, P()))
+    if fam == "ssm":
+        from repro.models.rwkv6 import n_heads
+        H = n_heads(cfg)
+        b_ax = rules.fsdp if (rules.fsdp and B % rules.n_fsdp == 0) else None
+        h_ax = "model" if H % rules.n_model == 0 else None
+        shift = NamedSharding(mesh, P(None, b_ax, None, None))
+        wkv = NamedSharding(mesh, P(None, b_ax, h_ax, None, None))
+        return (tok, {"tm_shift": shift, "cm_shift": shift, "wkv": wkv})
+    if fam == "hybrid":
+        from repro.models.zamba2 import dims
+        d_inner, H, Pd, N = dims(cfg)
+        b_ax = rules.fsdp if (rules.fsdp and B % rules.n_fsdp == 0) else None
+        h_ax = "model" if H % rules.n_model == 0 else None
+        i_ax = "model" if d_inner % rules.n_model == 0 else None
+        kvh_ax = "model" if cfg.n_kv_heads % rules.n_model == 0 else None
+        return (tok, {
+            "conv": NamedSharding(mesh, P(None, b_ax, None, i_ax)),
+            "ssm": NamedSharding(mesh, P(None, b_ax, h_ax, None, None)),
+            "attn_k": NamedSharding(mesh, P(None, b_ax, None, kvh_ax, None)),
+            "attn_v": NamedSharding(mesh, P(None, b_ax, None, kvh_ax, None)),
+        }, NamedSharding(mesh, P()))
+    raise ValueError(fam)

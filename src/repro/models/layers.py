@@ -1,0 +1,288 @@
+"""Common layers: norms, RoPE, GQA attention (train/prefill/decode), MLPs.
+
+Pure-functional style: ``init_*(key, cfg) -> params`` and
+``apply(params, x, ...) -> y``. Parameters are nested dicts of jnp arrays so
+the sharding rule engine (repro.parallel.sharding) can pattern-match paths.
+
+Attention uses the Pallas flash kernel on the prefill/train path when
+enabled (repro.kernels.flash_attention.ops); falls back to the jnp reference
+everywhere else (decode, CPU smoke).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+# ------------------------------------------------------------------ inits
+
+
+def _dense_init(key, shape, scale=None):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    scale = scale if scale is not None else 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, shape, dtype=jnp.float32) * scale)
+
+
+def init_norm(cfg: ModelConfig, with_bias: Optional[bool] = None) -> dict:
+    p = {"scale": jnp.ones((cfg.d_model,), jnp.float32)}
+    if with_bias if with_bias is not None else cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((cfg.d_model,), jnp.float32)
+    return p
+
+
+def apply_norm(p: dict, x: jax.Array, eps: float = 1e-5,
+               kind: str = "rmsnorm") -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if kind == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    else:
+        y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    y = y * p["scale"]
+    if "bias" in p:
+        y = y + p["bias"]
+    return y.astype(x.dtype)
+
+
+# ------------------------------------------------------------------- RoPE
+
+
+def rope_freqs(hd: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd); positions: (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    cos = cos[..., None, :]                             # (..., S, 1, hd/2)
+    sin = sin[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -------------------------------------------------------------- attention
+
+
+def init_attention(key, cfg: ModelConfig) -> dict:
+    hd = cfg.hd
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": _dense_init(ks[0], (cfg.d_model, cfg.n_heads, hd)),
+        "wk": _dense_init(ks[1], (cfg.d_model, cfg.n_kv_heads, hd)),
+        "wv": _dense_init(ks[2], (cfg.d_model, cfg.n_kv_heads, hd)),
+        "wo": _dense_init(ks[3], (cfg.n_heads, hd, cfg.d_model)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads, hd), jnp.float32)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads, hd), jnp.float32)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads, hd), jnp.float32)
+    return p
+
+
+def _qkv(p: dict, x: jax.Array, cfg: ModelConfig):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    if "bq" in p:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    return q, k, v
+
+
+def repeat_kv(k: jax.Array, n_rep: int) -> jax.Array:
+    if n_rep == 1:
+        return k
+    return jnp.repeat(k, n_rep, axis=2)
+
+
+def sdpa(q, k, v, *, causal: bool, window: int = 0,
+         q_offset: jax.Array | int = 0) -> jax.Array:
+    """Reference scaled-dot-product attention.
+    q: (B,Sq,H,hd), k/v: (B,Sk,H,hd). q_offset: absolute pos of q[0]."""
+    hd = q.shape[-1]
+    logits = jnp.einsum("bqhk,bshk->bhqs", q, k) / math.sqrt(hd)
+    sq, sk = q.shape[1], k.shape[1]
+    qpos = jnp.arange(sq) + q_offset
+    kpos = jnp.arange(sk)
+    mask = jnp.ones((sq, sk), dtype=bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    logits = jnp.where(mask[None, None], logits.astype(jnp.float32), -1e30)
+    w = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqs,bshk->bqhk", w, v)
+
+
+def chunked_sdpa(q, k, v, *, causal: bool, window: int = 0,
+                 chunk: int = 1024) -> jax.Array:
+    """Flash-equivalent attention in pure jnp: iterate kv blocks with a
+    running (max, denom, acc) — O(Sq·chunk) live memory instead of O(Sq·Sk).
+    This is the CPU-loweriable twin of kernels/flash_attention (same math,
+    same memory behaviour), used for dry-run/roofline lowers and as the
+    non-TPU production path. Python loop (not scan) so HloCostAnalysis sees
+    every block."""
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    chunk = min(chunk, Sk)
+    assert Sk % chunk == 0
+    scale = 1.0 / math.sqrt(hd)
+    qf = q.astype(jnp.float32)
+    m = jnp.full((B, H, Sq), -1e30, jnp.float32)
+    denom = jnp.zeros((B, H, Sq), jnp.float32)
+    acc = jnp.zeros((B, Sq, H, hd), jnp.float32)
+    qpos = jnp.arange(Sq)
+    for ci in range(Sk // chunk):
+        k0 = ci * chunk
+        if causal and k0 > Sq - 1:
+            break
+        kc = k[:, k0:k0 + chunk].astype(jnp.float32)
+        vc = v[:, k0:k0 + chunk].astype(jnp.float32)
+        s = jnp.einsum("bqhk,bshk->bhqs", qf, kc) * scale
+        kpos = k0 + jnp.arange(chunk)
+        mask = jnp.ones((Sq, chunk), dtype=bool)
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        if window:
+            mask &= kpos[None, :] > qpos[:, None] - window
+        s = jnp.where(mask[None, None], s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p_ = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        denom = denom * alpha + jnp.sum(p_, axis=-1)
+        acc = (acc * alpha.transpose(0, 2, 1)[..., None]
+               + jnp.einsum("bhqs,bshk->bqhk", p_, vc))
+        m = m_new
+    out = acc / jnp.maximum(denom, 1e-20).transpose(0, 2, 1)[..., None]
+    return out.astype(q.dtype)
+
+
+def attention(
+    p: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    causal: bool = True,
+    positions: Optional[jax.Array] = None,
+    kv_cache: Optional[dict] = None,
+    cache_index: Optional[jax.Array] = None,
+    cross_kv: Optional[tuple] = None,
+    use_flash: bool = False,
+):
+    """GQA attention for train/prefill (kv_cache None) or decode.
+
+    decode: x is (B,1,D); kv_cache = {"k": (B,S,KV,hd), "v": ...} is updated
+    at ``cache_index`` and attention runs over the full cache with a length
+    mask. Returns (out, new_kv_cache).
+    """
+    B, S, _ = x.shape
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    if cross_kv is not None:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+        if "bq" in p:
+            q = q + p["bq"].astype(x.dtype)
+        k, v = cross_kv
+        if cfg.pos == "rope":
+            pass  # no rope on cross attention
+        out = sdpa(q, repeat_kv(k, n_rep), repeat_kv(v, n_rep), causal=False)
+        out = jnp.einsum("bqhk,hkd->bqd", out, p["wo"].astype(x.dtype))
+        return out, None
+
+    q, k, v = _qkv(p, x, cfg)
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    if cfg.pos == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+
+    if kv_cache is None:
+        kf = repeat_kv(k, n_rep)
+        vf = repeat_kv(v, n_rep)
+        if use_flash:
+            if jax.default_backend() == "tpu":
+                from repro.kernels.flash_attention import ops as flash_ops
+                out = flash_ops.flash_attention(
+                    q, kf, vf, causal=causal, window=cfg.sliding_window)
+            else:
+                out = chunked_sdpa(q, kf, vf, causal=causal,
+                                   window=cfg.sliding_window)
+        else:
+            out = sdpa(q, kf, vf, causal=causal, window=cfg.sliding_window)
+        out = jnp.einsum("bqhk,hkd->bqd", out, p["wo"].astype(x.dtype))
+        return out, {"k": k, "v": v}
+
+    # ---- decode: update cache in place, attend over cache
+    idx = cache_index  # scalar int32: current write position
+    ck = jax.lax.dynamic_update_slice_in_dim(kv_cache["k"], k, idx, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(kv_cache["v"], v, idx, axis=1)
+    Sk = ck.shape[1]
+    kf = repeat_kv(ck, n_rep)
+    vf = repeat_kv(cv, n_rep)
+    hd = q.shape[-1]
+    logits = jnp.einsum("bqhk,bshk->bhqs", q, kf) / math.sqrt(hd)
+    kpos = jnp.arange(Sk)
+    valid = kpos[None, :] <= idx  # positions written so far (incl. current)
+    if cfg.sliding_window:
+        valid &= kpos[None, :] > idx - cfg.sliding_window
+    logits = jnp.where(valid[None, None], logits.astype(jnp.float32), -1e30)
+    w = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhqs,bshk->bqhk", w, vf)
+    out = jnp.einsum("bqhk,hkd->bqd", out, p["wo"].astype(x.dtype))
+    return out, {"k": ck, "v": cv}
+
+
+# ------------------------------------------------------------------- MLPs
+
+
+def init_mlp(key, cfg: ModelConfig, d_ff: Optional[int] = None) -> dict:
+    d_ff = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.mlp in ("swiglu", "geglu"):
+        return {
+            "w_gate": _dense_init(ks[0], (cfg.d_model, d_ff)),
+            "w_up": _dense_init(ks[1], (cfg.d_model, d_ff)),
+            "w_down": _dense_init(ks[2], (d_ff, cfg.d_model)),
+        }
+    return {
+        "w_up": _dense_init(ks[0], (cfg.d_model, d_ff)),
+        "b_up": jnp.zeros((d_ff,), jnp.float32),
+        "w_down": _dense_init(ks[1], (d_ff, cfg.d_model)),
+        "b_down": jnp.zeros((cfg.d_model,), jnp.float32),
+    }
+
+
+def apply_mlp(p: dict, x: jax.Array, kind: str) -> jax.Array:
+    if kind in ("swiglu", "geglu"):
+        act = jax.nn.silu if kind == "swiglu" else (
+            lambda u: jax.nn.gelu(u, approximate=True))
+        g = act(x @ p["w_gate"].astype(x.dtype))
+        u = x @ p["w_up"].astype(x.dtype)
+        return (g * u) @ p["w_down"].astype(x.dtype)
+    h = jax.nn.gelu(x @ p["w_up"].astype(x.dtype)
+                    + p["b_up"].astype(x.dtype), approximate=True)
+    return h @ p["w_down"].astype(x.dtype) + p["b_down"].astype(x.dtype)
+
+
+# ------------------------------------------------------------- embeddings
+
+
+def init_embedding(key, cfg: ModelConfig, padded_vocab: int) -> dict:
+    p = {"table": _dense_init(key, (padded_vocab, cfg.d_model), scale=0.02)}
+    if cfg.pos == "learned":
+        p["pos"] = _dense_init(key, (cfg.max_seq, cfg.d_model), scale=0.02)
+    return p
+
+
+def embed(p: dict, tokens: jax.Array, dtype) -> jax.Array:
+    return p["table"].astype(dtype)[tokens]

@@ -1,0 +1,301 @@
+"""RWKV-6 "Finch" (arXiv:2404.05892): attention-free LM with token-shift
+and data-dependent per-channel decay.
+
+Time-mix recurrence per head (head_dim K = V dim):
+
+    S_t = diag(w_t) · S_{t-1} + k_t^T v_t          (S: K×V state)
+    o_t = r_t · (S_{t-1} + diag(u) k_t^T v_t)
+
+with w_t = exp(-exp(decay_t)) data-dependent (LoRA on the shifted input) and
+u the "bonus" for the current token. Training uses a CHUNKED evaluation
+(intra-chunk dense + inter-chunk state scan) — the same scheme the Pallas
+kernel (repro.kernels.rwkv6_scan) implements with VMEM tiles; decode is the
+single-step recurrence, O(1) in sequence length (this is why rwkv6 runs the
+long_500k cell).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import _dense_init, apply_norm, init_norm
+from repro.models.scan_util import maybe_scan
+
+
+def n_heads(cfg: ModelConfig) -> int:
+    return cfg.d_model // cfg.rwkv.head_dim
+
+
+def init_time_mix(key, cfg: ModelConfig) -> dict:
+    D = cfg.d_model
+    r = cfg.rwkv.decay_lora
+    ks = jax.random.split(key, 10)
+    H = n_heads(cfg)
+    K = cfg.rwkv.head_dim
+    return {
+        # token-shift interpolation factors (per channel, per projection)
+        "mu_r": jnp.full((D,), 0.5, jnp.float32),
+        "mu_k": jnp.full((D,), 0.5, jnp.float32),
+        "mu_v": jnp.full((D,), 0.5, jnp.float32),
+        "mu_w": jnp.full((D,), 0.5, jnp.float32),
+        "mu_g": jnp.full((D,), 0.5, jnp.float32),
+        "wr": _dense_init(ks[0], (D, D)),
+        "wk": _dense_init(ks[1], (D, D)),
+        "wv": _dense_init(ks[2], (D, D)),
+        "wg": _dense_init(ks[3], (D, D)),
+        "wo": _dense_init(ks[4], (D, D)),
+        # data-dependent decay: LoRA  w = base + tanh(x A) B
+        "decay_base": jnp.zeros((D,), jnp.float32) - 6.0,
+        "decay_A": _dense_init(ks[5], (D, r)),
+        "decay_B": _dense_init(ks[6], (r, D), scale=0.01),
+        "bonus_u": jnp.zeros((H, K), jnp.float32),
+        "ln_x": jnp.ones((D,), jnp.float32),  # group-norm scale on output
+    }
+
+
+def init_channel_mix(key, cfg: ModelConfig) -> dict:
+    D, F = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 2)
+    return {
+        "mu_k": jnp.full((D,), 0.5, jnp.float32),
+        "w_in": _dense_init(ks[0], (D, F)),
+        "w_out": _dense_init(ks[1], (F, D)),
+    }
+
+
+def _token_shift(x: jax.Array, prev: Optional[jax.Array] = None) -> jax.Array:
+    """x: (B,S,D) -> x shifted right one step; prev: (B,1,D) carry for decode."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def _mix(x, xs, mu):
+    return x + (xs - x) * mu
+
+
+def _project(p, x, xs, dtype):
+    r = _mix(x, xs, p["mu_r"].astype(dtype)) @ p["wr"].astype(dtype)
+    k = _mix(x, xs, p["mu_k"].astype(dtype)) @ p["wk"].astype(dtype)
+    v = _mix(x, xs, p["mu_v"].astype(dtype)) @ p["wv"].astype(dtype)
+    g = _mix(x, xs, p["mu_g"].astype(dtype)) @ p["wg"].astype(dtype)
+    xw = _mix(x, xs, p["mu_w"].astype(dtype))
+    decay = (p["decay_base"].astype(jnp.float32)
+             + jnp.tanh(xw.astype(jnp.float32) @ p["decay_A"].astype(jnp.float32))
+             @ p["decay_B"].astype(jnp.float32))
+    w = jnp.exp(-jnp.exp(decay))  # (B,S,D) in (0,1)
+    return r, k, v, g, w
+
+
+def wkv_chunked(r, k, v, w, u, chunk: int, state0=None, use_kernel: bool = False,
+                unroll: bool = False):
+    """Chunked WKV evaluation.
+
+    r,k,v,w: (B, S, H, K) (V dim == K); u: (H, K).
+    Returns (out (B,S,H,K), final state (B,H,K,K)).
+
+    Math (per head; state S is K_dim × V_dim):
+      o_t = r_t · (S_{t-1} + u ⊙ k_t ⊗ v_t);  S_t = diag(w_t) S_{t-1} + k_t ⊗ v_t
+    Chunking: within a chunk of length c, cumulative decays give
+      o = intra-chunk (masked, decay-weighted) + r·(cumdecay · S_carry)
+    """
+    if use_kernel:
+        from repro.kernels.rwkv6_scan import ops as wkv_ops
+        return wkv_ops.wkv6(r, k, v, w, u, chunk=chunk, state0=state0)
+
+    B, S, H, K = r.shape
+    assert S % chunk == 0, (S, chunk)
+    n = S // chunk
+    rc = r.reshape(B, n, chunk, H, K)
+    kc = k.reshape(B, n, chunk, H, K)
+    vc = v.reshape(B, n, chunk, H, K)
+    wc = w.reshape(B, n, chunk, H, K).astype(jnp.float32)
+
+    logw = jnp.log(jnp.clip(wc, 1e-12, 1.0))
+    cum = jnp.cumsum(logw, axis=2)            # inclusive cumulative log-decay
+    state0 = (jnp.zeros((B, H, K, K), jnp.float32)
+              if state0 is None else state0.astype(jnp.float32))
+
+    def scan_chunk(state, inp):
+        rc_, kc_, vc_, cum_, logw_ = inp       # (B,c,H,K) each
+        rf = rc_.astype(jnp.float32)
+        kf = kc_.astype(jnp.float32)
+        vf = vc_.astype(jnp.float32)
+        # decay from chunk start to t-1 (exclusive cumulation)
+        cum_excl = cum_ - logw_
+        # inter-chunk: o_inter[t] = (r_t ⊙ exp(cum_excl_t)) @ state
+        r_dec = rf * jnp.exp(cum_excl)
+        o_inter = jnp.einsum("bthk,bhkv->bthv", r_dec, state)
+        # intra-chunk, pair (t, s<t): per-channel decay
+        # exp(cum_excl_t − cum_s), exponent ≤ 0 inside the strict mask —
+        # the PAIRWISE form is overflow-safe (the factored
+        # exp(cum_excl)·exp(−cum) form is not).
+        c = rf.shape[1]
+        dec = cum_excl[:, :, None] - cum_[:, None, :, :]     # (B,t,s,H,K)
+        mask = jnp.tril(jnp.ones((c, c), bool), k=-1)
+        dec = jnp.where(mask[None, :, :, None, None], dec, -jnp.inf)
+        att = jnp.einsum("bthk,bshk,btshk->bhts", rf, kf, jnp.exp(dec))
+        o_intra = jnp.einsum("bhts,bshv->bthv", att, vf)
+        # bonus (current token): r_t · (u ⊙ k_t ⊗ v_t)
+        o_bonus = jnp.einsum("bthk,hk,bthk->bth", rf, u.astype(jnp.float32),
+                             kf)[..., None] * vf
+        # state update: S' = exp(cum_end) S + Σ_s exp(cum_end − cum_s) k_s ⊗ v_s
+        cum_end = cum_[:, -1:, :, :]
+        k_dec = kf * jnp.exp(cum_end - cum_)
+        state = (jnp.exp(cum_end[:, 0])[..., None] * state
+                 + jnp.einsum("bshk,bshv->bhkv", k_dec, vf))
+        return state, (o_inter + o_intra + o_bonus)
+
+    inputs = (
+        jnp.moveaxis(rc, 1, 0), jnp.moveaxis(kc, 1, 0),
+        jnp.moveaxis(vc, 1, 0), jnp.moveaxis(cum, 1, 0),
+        jnp.moveaxis(logw, 1, 0),
+    )
+    state, outs = maybe_scan(scan_chunk, state0, inputs, unroll=unroll,
+                             with_ys=True)
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, S, H, K)
+    return out.astype(r.dtype), state
+
+
+def wkv_step(r, k, v, w, u, state):
+    """Single decode step. r,k,v,w: (B,H,K); state: (B,H,K,K) -> (out, state')."""
+    rf, kf, vf = (a.astype(jnp.float32) for a in (r, k, v))
+    wf = w.astype(jnp.float32)
+    kv = jnp.einsum("bhk,bhv->bhkv", kf, vf)
+    out = jnp.einsum("bhk,bhkv->bhv", rf, state + u.astype(jnp.float32)[None, :, :, None] * kv)
+    new_state = wf[..., None] * state + kv
+    return out.astype(r.dtype), new_state
+
+
+def time_mix(p, x, cfg: ModelConfig, *, shift_prev=None, state0=None,
+             use_kernel: bool = False, unroll: bool = False):
+    """Full RWKV6 time-mix block. x: (B,S,D). Returns (y, (shift_carry, state))."""
+    B, S, D = x.shape
+    H, K = n_heads(cfg), cfg.rwkv.head_dim
+    xs = _token_shift(x, shift_prev)
+    r, k, v, g, w = _project(p, x, xs, x.dtype)
+    rh = r.reshape(B, S, H, K)
+    kh = k.reshape(B, S, H, K)
+    vh = v.reshape(B, S, H, K)
+    wh = w.reshape(B, S, H, K)
+    if S == 1 and state0 is not None:
+        o, state = wkv_step(rh[:, 0], kh[:, 0], vh[:, 0], wh[:, 0],
+                            p["bonus_u"], state0)
+        o = o[:, None]
+    else:
+        o, state = wkv_chunked(rh, kh, vh, wh, p["bonus_u"],
+                               chunk=min(cfg.rwkv.chunk, S), state0=state0,
+                               use_kernel=use_kernel, unroll=unroll)
+    o = o.reshape(B, S, D)
+    # per-head group norm (ln_x)
+    o32 = o.astype(jnp.float32).reshape(B, S, H, K)
+    o32 = o32 * jax.lax.rsqrt(jnp.mean(o32 * o32, -1, keepdims=True) + 1e-5)
+    o = (o32.reshape(B, S, D) * p["ln_x"]).astype(x.dtype)
+    y = (o * jax.nn.silu(g)) @ p["wo"].astype(x.dtype)
+    return y, (x[:, -1:], state)
+
+
+def channel_mix(p, x, *, shift_prev=None):
+    xs = _token_shift(x, shift_prev)
+    xk = _mix(x, xs, p["mu_k"].astype(x.dtype))
+    h = jnp.square(jax.nn.relu(xk @ p["w_in"].astype(x.dtype)))
+    return h @ p["w_out"].astype(x.dtype), x[:, -1:]
+
+
+# ----------------------------------------------------------------- full LM
+
+
+def _init_layer(key, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 2)
+    return {
+        "tm_norm": init_norm(cfg),
+        "time_mix": init_time_mix(ks[0], cfg),
+        "cm_norm": init_norm(cfg),
+        "channel_mix": init_channel_mix(ks[1], cfg),
+    }
+
+
+def init_lm(key, cfg: ModelConfig) -> dict:
+    from repro.models.transformer import padded_vocab
+    from repro.models import layers as Lay
+    ks = jax.random.split(key, 4)
+    layer_keys = jax.random.split(ks[0], cfg.n_layers)
+    stacked = jax.vmap(lambda k: _init_layer(k, cfg))(layer_keys)
+    pv = padded_vocab(cfg)
+    return {
+        "embed": Lay.init_embedding(ks[1], cfg, pv),
+        "layers": stacked,
+        "final_norm": init_norm(cfg),
+        "lm_head": _dense_init(ks[2], (cfg.d_model, pv), scale=0.02),
+    }
+
+
+def forward(params, tokens, cfg: ModelConfig, *, remat: str = "none",
+            use_kernel: bool = False, unroll: bool = False):
+    from repro.models.transformer import _unembed
+    dtype = jnp.dtype(cfg.dtype)
+    from repro.models.layers import embed
+    x = embed(params["embed"], tokens, dtype)
+
+    def body(lp, x):
+        h, _ = time_mix(lp["time_mix"],
+                        apply_norm(lp["tm_norm"], x, cfg.norm_eps),
+                        cfg, use_kernel=use_kernel, unroll=unroll)
+        x = x + h
+        h, _ = channel_mix(lp["channel_mix"],
+                           apply_norm(lp["cm_norm"], x, cfg.norm_eps))
+        return x + h
+
+    if remat == "full":
+        body = jax.checkpoint(body)
+    elif remat == "dots":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+
+    def scan_fn(x, lp):
+        return body(lp, x), None
+
+    x, _ = maybe_scan(scan_fn, x, params["layers"], unroll=unroll)
+    return _unembed(params, x, cfg)
+
+
+def init_decode_state(cfg: ModelConfig, batch: int) -> dict:
+    H, K = n_heads(cfg), cfg.rwkv.head_dim
+    return {
+        "tm_shift": jnp.zeros((cfg.n_layers, batch, 1, cfg.d_model),
+                              jnp.dtype(cfg.dtype)),
+        "cm_shift": jnp.zeros((cfg.n_layers, batch, 1, cfg.d_model),
+                              jnp.dtype(cfg.dtype)),
+        "wkv": jnp.zeros((cfg.n_layers, batch, H, K, K), jnp.float32),
+    }
+
+
+def decode_step(params, token, state, cfg: ModelConfig, *,
+                unroll: bool = False):
+    """O(1)-in-sequence decode. token: (B,1). -> (logits, new state)."""
+    from repro.models.transformer import _unembed
+    from repro.models.layers import embed
+    dtype = jnp.dtype(cfg.dtype)
+    x = embed(params["embed"], token, dtype)
+
+    def scan_fn(x, inp):
+        lp, tm_s, cm_s, wkv_s = inp
+        h, (tm_new, wkv_new) = time_mix(
+            lp["time_mix"], apply_norm(lp["tm_norm"], x, cfg.norm_eps),
+            cfg, shift_prev=tm_s, state0=wkv_s)
+        x = x + h
+        h, cm_new = channel_mix(
+            lp["channel_mix"], apply_norm(lp["cm_norm"], x, cfg.norm_eps),
+            shift_prev=cm_s)
+        return x + h, (tm_new, cm_new, wkv_new)
+
+    x, (tm, cm, wkv) = maybe_scan(
+        scan_fn, x,
+        (params["layers"], state["tm_shift"], state["cm_shift"], state["wkv"]),
+        unroll=unroll, with_ys=True)
+    logits = _unembed(params, x, cfg)
+    return logits, {"tm_shift": tm, "cm_shift": cm, "wkv": wkv}

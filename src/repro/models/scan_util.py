@@ -1,0 +1,28 @@
+"""Scan helper: lax.scan for production HLO-size-O(1) lowering, or a fully
+unrolled python loop for cost-analysis lowers (XLA's HloCostAnalysis counts
+a while body exactly once, so roofline FLOP/byte numbers come from small
+UNROLLED variants — see benchmarks/roofline.py)."""
+
+from __future__ import annotations
+
+import jax
+
+
+def maybe_scan(f, carry, xs, *, unroll: bool = False, with_ys: bool = False):
+    """scan f over leading axis of xs. f: (carry, x) -> (carry, y)."""
+    if not unroll:
+        return jax.lax.scan(f, carry, xs)
+    length = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(length):
+        x = jax.tree.map(lambda a: a[i], xs)
+        carry, y = f(carry, x)
+        ys.append(y)
+    if with_ys or (ys and ys[0] is not None):
+        try:
+            stacked = jax.tree.map(lambda *a: jax.numpy.stack(a), *ys)
+        except Exception:
+            stacked = None
+    else:
+        stacked = None
+    return carry, stacked

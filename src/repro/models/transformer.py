@@ -1,0 +1,234 @@
+"""Decoder-only transformer LM (dense + MoE + VLM prefix variants).
+
+Layers are STACKED (leading L dim) and driven by ``lax.scan`` so the HLO is
+O(1) in depth — the production-correct choice for 90+-layer configs and the
+only tractable one for 512-device dry-run compiles on this container.
+Activation checkpointing wraps the scanned body (``remat_policy``).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models.scan_util import maybe_scan
+
+VOCAB_PAD_MULTIPLE = 256
+
+
+def padded_vocab(cfg: ModelConfig) -> int:
+    v = cfg.vocab_size
+    return -(-v // VOCAB_PAD_MULTIPLE) * VOCAB_PAD_MULTIPLE
+
+
+def _init_layer(key, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 4)
+    p = {
+        "attn_norm": L.init_norm(cfg),
+        "attn": L.init_attention(ks[0], cfg),
+        "mlp_norm": L.init_norm(cfg),
+    }
+    if cfg.moe:
+        p["moe"] = MOE.init_moe(ks[1], cfg)
+    else:
+        p["mlp"] = L.init_mlp(ks[2], cfg)
+    return p
+
+
+def init_lm(key, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 4)
+    layer_keys = jax.random.split(ks[0], cfg.n_layers)
+    stacked = jax.vmap(lambda k: _init_layer(k, cfg))(layer_keys)
+    pv = padded_vocab(cfg)
+    params = {
+        "embed": L.init_embedding(ks[1], cfg, pv),
+        "layers": stacked,
+        "final_norm": L.init_norm(cfg),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L._dense_init(ks[2], (cfg.d_model, pv), scale=0.02)
+    return params
+
+
+def _layer_apply(lp: dict, x: jax.Array, cfg: ModelConfig, *,
+                 positions, use_flash: bool, use_moe_kernel: bool = False):
+    h, _ = L.attention(
+        lp["attn"], L.apply_norm(lp["attn_norm"], x, cfg.norm_eps, cfg.norm),
+        cfg, causal=True, positions=positions, use_flash=use_flash)
+    x = x + h
+    hn = L.apply_norm(lp["mlp_norm"], x, cfg.norm_eps, cfg.norm)
+    if cfg.moe:
+        x = x + MOE.apply_moe(lp["moe"], hn, cfg, use_kernel=use_moe_kernel)
+    else:
+        x = x + L.apply_mlp(lp["mlp"], hn, cfg.mlp)
+    return x
+
+
+def _unembed(params: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    x = L.apply_norm(params["final_norm"], x, cfg.norm_eps, cfg.norm)
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"]["table"].astype(x.dtype).T
+    else:
+        logits = x @ params["lm_head"].astype(x.dtype)
+    # mask vocab padding so the softmax ignores it
+    pv, v = logits.shape[-1], cfg.vocab_size
+    if pv != v:
+        neg = jnp.full((pv - v,), -1e30, logits.dtype)
+        logits = logits.at[..., v:].set(neg)
+    return logits
+
+
+def forward(params: dict, tokens: jax.Array, cfg: ModelConfig, *,
+            prefix_embeds: Optional[jax.Array] = None,
+            use_flash: bool = False,
+            remat: str = "none", unroll: bool = False,
+            return_hidden: bool = False) -> jax.Array:
+    """Training/eval forward -> logits (B, S[, +P], V_padded).
+
+    prefix_embeds: (B, P, D) precomputed modality embeddings (VLM stub) that
+    are prepended to the token embeddings (loss masking is the caller's job).
+    remat: none | full | dots — activation checkpoint policy on the layer.
+    """
+    dtype = jnp.dtype(cfg.dtype)
+    x = L.embed(params["embed"], tokens, dtype)
+    if getattr(cfg, "pos", "rope") == "learned":
+        S = x.shape[1]
+        x = x + params["embed"]["pos"][:S].astype(dtype)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(dtype), x], axis=1)
+    positions = jnp.arange(x.shape[1])[None, :]
+
+    body = partial(_layer_apply, cfg=cfg, positions=positions,
+                   use_flash=use_flash)
+    if remat == "full":
+        body = jax.checkpoint(body)
+    elif remat == "dots":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+
+    def scan_fn(x, lp):
+        return body(lp, x), None
+
+    x, _ = maybe_scan(scan_fn, x, params["layers"], unroll=unroll)
+    if return_hidden:
+        return L.apply_norm(params["final_norm"], x, cfg.norm_eps, cfg.norm)
+    return _unembed(params, x, cfg)
+
+
+def prefill(params: dict, tokens: jax.Array, cfg: ModelConfig, *,
+            use_flash: bool = False, unroll: bool = False):
+    """Prefill pass -> (last-position logits, stacked KV caches).
+
+    caches: {"k","v"}: (L, B, S, KV, hd) — ready for decode_step writes at
+    index S.
+    """
+    dtype = jnp.dtype(cfg.dtype)
+    x = L.embed(params["embed"], tokens, dtype)
+    if cfg.pos == "learned":
+        x = x + params["embed"]["pos"][: x.shape[1]].astype(dtype)
+    positions = jnp.arange(x.shape[1])[None, :]
+
+    def scan_fn(x, lp):
+        h, kv = L.attention(
+            lp["attn"],
+            L.apply_norm(lp["attn_norm"], x, cfg.norm_eps, cfg.norm),
+            cfg, causal=True, positions=positions, use_flash=use_flash)
+        x = x + h
+        hn = L.apply_norm(lp["mlp_norm"], x, cfg.norm_eps, cfg.norm)
+        if cfg.moe:
+            x = x + MOE.apply_moe(lp["moe"], hn, cfg)
+        else:
+            x = x + L.apply_mlp(lp["mlp"], hn, cfg.mlp)
+        return x, kv
+
+    x, caches = maybe_scan(scan_fn, x, params["layers"], unroll=unroll,
+                           with_ys=True)
+    logits = _unembed(params, x[:, -1:, :], cfg)
+    return logits, caches
+
+
+def decode_step(params: dict, token: jax.Array, caches: dict,
+                index: jax.Array, cfg: ModelConfig, *,
+                unroll: bool = False):
+    """One decode step. token: (B, 1) int32; caches: (L,B,S,KV,hd);
+    index: scalar int32 write position. -> (logits (B,1,V), new caches)."""
+    dtype = jnp.dtype(cfg.dtype)
+    x = L.embed(params["embed"], token, dtype)
+    if cfg.pos == "learned":
+        x = x + jax.lax.dynamic_slice_in_dim(
+            params["embed"]["pos"], index, 1, axis=0).astype(dtype)[None]
+    positions = index[None, None].astype(jnp.int32)
+
+    def scan_fn(x, layer_and_cache):
+        lp, cache_l = layer_and_cache
+        h, new_kv = L.attention(
+            lp["attn"],
+            L.apply_norm(lp["attn_norm"], x, cfg.norm_eps, cfg.norm),
+            cfg, causal=True, positions=positions,
+            kv_cache=cache_l, cache_index=index)
+        x = x + h
+        hn = L.apply_norm(lp["mlp_norm"], x, cfg.norm_eps, cfg.norm)
+        if cfg.moe:
+            x = x + MOE.apply_moe(lp["moe"], hn, cfg)
+        else:
+            x = x + L.apply_mlp(lp["mlp"], hn, cfg.mlp)
+        return x, new_kv
+
+    x, new_caches = maybe_scan(scan_fn, x, (params["layers"], caches),
+                               unroll=unroll, with_ys=True)
+    logits = _unembed(params, x, cfg)
+    return logits, new_caches
+
+
+def init_kv_caches(cfg: ModelConfig, batch: int, max_seq: int) -> dict:
+    dtype = jnp.dtype(cfg.dtype)
+    shape = (cfg.n_layers, batch, max_seq, cfg.n_kv_heads, cfg.hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def loss_fn(params: dict, tokens: jax.Array, labels: jax.Array,
+            cfg: ModelConfig, *, prefix_embeds=None, use_flash=False,
+            remat: str = "dots", unroll: bool = False) -> jax.Array:
+    logits = forward(params, tokens, cfg, prefix_embeds=prefix_embeds,
+                     use_flash=use_flash, remat=remat, unroll=unroll)
+    if prefix_embeds is not None:
+        logits = logits[:, prefix_embeds.shape[1]:, :]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return -jnp.mean(ll)
+
+
+def unembed_matrix(params: dict, cfg: ModelConfig, dtype):
+    if cfg.tie_embeddings:
+        return params["embed"]["table"].astype(dtype).T
+    return params["lm_head"].astype(dtype)
+
+
+def vocab_parallel_xent(hidden: jax.Array, params: dict, labels: jax.Array,
+                        cfg: ModelConfig) -> jax.Array:
+    """Cross-entropy WITHOUT materializing/gathering full logits.
+
+    The unembed matrix stays vocab-sharded (model axis); the reductions
+    (max, sum-exp, label pick) are over the sharded vocab axis, so SPMD
+    lowers them to (B,S)-sized all-reduces instead of the (B,S,V) logits
+    all-gather of the naive path. The label logit is picked with a one-hot
+    einsum (gather over a sharded axis would force a full gather); vocab
+    padding is masked additively via iota (no .at[].set layout change).
+    """
+    w = unembed_matrix(params, cfg, hidden.dtype)       # (D, Vp)
+    logits = (hidden @ w).astype(jnp.float32)           # (B,S,Vp) v-sharded
+    pv, v = logits.shape[-1], cfg.vocab_size
+    if pv != v:
+        pad_mask = (jnp.arange(pv) >= v).astype(jnp.float32) * -1e30
+        logits = logits + pad_mask
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    lse = jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1)) + m[..., 0]
+    onehot = jax.nn.one_hot(labels, pv, dtype=jnp.float32)
+    label_logit = jnp.einsum("bsv,bsv->bs", logits, onehot)
+    return jnp.mean(lse - label_logit)

@@ -1,0 +1,292 @@
+"""Zamba2 (arXiv:2411.15242): Mamba2 (SSD) backbone + a SHARED
+attention+MLP block invoked every ``attn_every`` layers (the same weights
+each time — Zamba's parameter-sharing trick), concatenating the backbone
+input with the original embedding.
+
+Mamba2 SSD block (simplified, faithful in structure):
+  in_proj -> [z (gate), x, B, C, dt]   per head: x:(P,), B,C:(N,), dt scalar
+  short depthwise conv on x/B/C (width 4)
+  recurrence per head:  h_t = exp(A·dt_t) h_{t-1} + dt_t · (B_t ⊗ x_t)
+                        y_t = C_t · h_t + D ⊙ x_t
+  gate: y ⊙ silu(z), out_proj.
+
+Chunked evaluation mirrors rwkv6 (scalar per-head decay makes it simpler);
+decode is the O(1) single-step recurrence — zamba2 runs long_500k with its
+shared attention restricted to a sliding window.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.scan_util import maybe_scan
+from repro.models.layers import (
+    _dense_init, apply_norm, init_norm, init_attention, init_mlp,
+    apply_mlp, attention,
+)
+
+
+def dims(cfg: ModelConfig):
+    d_inner = cfg.ssm.expand * cfg.d_model
+    H = d_inner // cfg.ssm.head_dim
+    return d_inner, H, cfg.ssm.head_dim, cfg.ssm.state_dim
+
+
+def init_mamba2(key, cfg: ModelConfig) -> dict:
+    D = cfg.d_model
+    d_inner, H, P, N = dims(cfg)
+    ks = jax.random.split(key, 6)
+    return {
+        "w_in_z": _dense_init(ks[0], (D, d_inner)),
+        "w_in_x": _dense_init(ks[1], (D, d_inner)),
+        "w_in_B": _dense_init(ks[2], (D, H, N)),
+        "w_in_C": _dense_init(ks[3], (D, H, N)),
+        "w_in_dt": _dense_init(ks[4], (D, H)),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H).astype(jnp.float32)),
+        "D_skip": jnp.ones((H, P), jnp.float32),
+        "conv_x": _dense_init(ks[5], (cfg.ssm.conv_width, d_inner), scale=0.5),
+        "out_norm": jnp.ones((d_inner,), jnp.float32),
+        "w_out": _dense_init(ks[5], (d_inner, D)),
+    }
+
+
+def _short_conv(x, w, carry: Optional[jax.Array] = None):
+    """Depthwise causal conv. x: (B,S,C), w: (W,C). carry: (B,W-1,C)."""
+    W = w.shape[0]
+    if carry is None:
+        carry = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([carry, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype)
+              for i in range(W))
+    return jax.nn.silu(out), xp[:, -(W - 1):]
+
+
+def ssd_chunked(xh, Bh, Ch, dt, A, chunk: int, state0=None,
+                unroll: bool = False):
+    """Chunked SSD scan.
+    xh: (B,S,H,P); Bh,Ch: (B,S,H,N); dt: (B,S,H); A: (H,) (positive decay rate).
+    h state: (B,H,N,P).  Returns (y (B,S,H,P), final state)."""
+    Bsz, S, H, P = xh.shape
+    N = Bh.shape[-1]
+    n = S // chunk
+    xf = xh.astype(jnp.float32).reshape(Bsz, n, chunk, H, P)
+    Bf = Bh.astype(jnp.float32).reshape(Bsz, n, chunk, H, N)
+    Cf = Ch.astype(jnp.float32).reshape(Bsz, n, chunk, H, N)
+    dtf = dt.astype(jnp.float32).reshape(Bsz, n, chunk, H)
+    logw = -A[None, None, None, :] * dtf          # (B,n,c,H) per-step log decay
+    cum = jnp.cumsum(logw, axis=2)
+    state0 = (jnp.zeros((Bsz, H, N, P), jnp.float32)
+              if state0 is None else state0.astype(jnp.float32))
+
+    def scan_chunk(state, inp):
+        xc, Bc, Cc, dtc, cumc, logwc = inp
+        # inter-chunk: h_t sees the carried state decayed by Π_{u≤t} w_u
+        C_dec = Cc * jnp.exp(cumc)[..., None]
+        y_inter = jnp.einsum("bthn,bhnp->bthp", C_dec, state)
+        # intra-chunk: PAIRWISE decay exp(cum_t − cum_s) for s ≤ t.
+        # The exponent is ≤ 0 inside the mask, so this form never overflows
+        # (the factored exp(cum_t)·exp(−cum_s) form does).
+        dec = cumc[:, :, None, :] - cumc[:, None, :, :]  # (B,t,s,H)
+        c = xc.shape[1]
+        mask = jnp.tril(jnp.ones((c, c), bool))   # inclusive: s ≤ t
+        dec = jnp.where(mask[None, :, :, None], dec, -jnp.inf)
+        att = jnp.einsum("bthn,bshn->bhts", Cc, Bc) * jnp.exp(
+            jnp.moveaxis(dec, 3, 1))
+        xdt = xc * dtc[..., None]
+        y_intra = jnp.einsum("bhts,bshp->bthp", att, xdt)
+        cum_end = cumc[:, -1:, :]
+        B_dec = Bc * jnp.exp(cum_end - cumc)[..., None]  # exponent ≤ 0
+        state = (jnp.exp(cum_end[:, 0])[..., None, None] * state
+                 + jnp.einsum("bshn,bshp->bhnp", B_dec, xdt))
+        return state, y_inter + y_intra
+
+    inputs = tuple(jnp.moveaxis(a, 1, 0)
+                   for a in (xf, Bf, Cf, dtf, cum, logw))
+    state, ys = maybe_scan(scan_chunk, state0, inputs, unroll=unroll,
+                           with_ys=True)
+    y = jnp.moveaxis(ys, 0, 1).reshape(Bsz, S, H, P)
+    return y.astype(xh.dtype), state
+
+
+def ssd_step(xh, Bh, Ch, dt, A, state):
+    """Single decode step. xh:(B,H,P), Bh/Ch:(B,H,N), dt:(B,H)."""
+    xf, Bf, Cf = (a.astype(jnp.float32) for a in (xh, Bh, Ch))
+    dtf = dt.astype(jnp.float32)
+    decay = jnp.exp(-A[None] * dtf)                        # (B,H)
+    upd = jnp.einsum("bhn,bhp->bhnp", Bf, xf * dtf[..., None])
+    state = decay[..., None, None] * state + upd
+    y = jnp.einsum("bhn,bhnp->bhp", Cf, state)
+    return y.astype(xh.dtype), state
+
+
+def mamba2_block(p, x, cfg: ModelConfig, *, conv_carry=None, ssm_state=None,
+                 unroll: bool = False):
+    """x: (B,S,D) -> (y, (conv_carry, ssm_state))."""
+    B, S, D = x.shape
+    d_inner, H, P, N = dims(cfg)
+    dtype = x.dtype
+    z = x @ p["w_in_z"].astype(dtype)
+    xi = x @ p["w_in_x"].astype(dtype)
+    xi, new_conv = _short_conv(xi, p["conv_x"], conv_carry)
+    Bh = jnp.einsum("bsd,dhn->bshn", x, p["w_in_B"].astype(dtype))
+    Ch = jnp.einsum("bsd,dhn->bshn", x, p["w_in_C"].astype(dtype))
+    dt = jax.nn.softplus(jnp.einsum("bsd,dh->bsh", x, p["w_in_dt"].astype(dtype))
+                         .astype(jnp.float32) + p["dt_bias"])
+    A = jnp.exp(p["A_log"])
+    xh = xi.reshape(B, S, H, P)
+    if S == 1 and ssm_state is not None:
+        y, state = ssd_step(xh[:, 0], Bh[:, 0], Ch[:, 0], dt[:, 0], A, ssm_state)
+        y = y[:, None]
+    else:
+        y, state = ssd_chunked(xh, Bh, Ch, dt, A,
+                               chunk=min(cfg.ssm.chunk, S), state0=ssm_state,
+                               unroll=unroll)
+    y = y + xh * p["D_skip"].astype(dtype)[None, None]
+    y = y.reshape(B, S, d_inner)
+    # RMS out-norm then gate
+    yf = y.astype(jnp.float32)
+    yf = yf * jax.lax.rsqrt(jnp.mean(yf * yf, -1, keepdims=True) + 1e-5)
+    y = (yf * p["out_norm"]).astype(dtype) * jax.nn.silu(z)
+    return y @ p["w_out"].astype(dtype), (new_conv, state)
+
+
+# ------------------------------------------------------------------ model
+
+
+def init_lm(key, cfg: ModelConfig) -> dict:
+    from repro.models.transformer import padded_vocab
+    from repro.models import layers as Lay
+    ks = jax.random.split(key, 6)
+    layer_keys = jax.random.split(ks[0], cfg.n_layers)
+
+    def layer_init(k):
+        return {"norm": init_norm(cfg), "mamba": init_mamba2(k, cfg)}
+
+    stacked = jax.vmap(layer_init)(layer_keys)
+    pv = padded_vocab(cfg)
+    return {
+        "embed": Lay.init_embedding(ks[1], cfg, pv),
+        "layers": stacked,
+        # the SHARED attention+MLP block (one set of weights, reused)
+        "shared_norm": init_norm(cfg),
+        "shared_attn": init_attention(ks[2], cfg),
+        "shared_mlp_norm": init_norm(cfg),
+        "shared_mlp": init_mlp(ks[3], cfg),
+        "final_norm": init_norm(cfg),
+        "lm_head": _dense_init(ks[4], (cfg.d_model, pv), scale=0.02),
+    }
+
+
+def _shared_block(params, x, cfg, *, kv_cache=None, cache_index=None):
+    h, kv = attention(
+        params["shared_attn"],
+        apply_norm(params["shared_norm"], x, cfg.norm_eps),
+        cfg, causal=True,
+        positions=(None if cache_index is None
+                   else cache_index[None, None].astype(jnp.int32)),
+        kv_cache=kv_cache, cache_index=cache_index)
+    x = x + h
+    x = x + apply_mlp(params["shared_mlp"],
+                      apply_norm(params["shared_mlp_norm"], x, cfg.norm_eps),
+                      cfg.mlp)
+    return x, kv
+
+
+def forward(params, tokens, cfg: ModelConfig, *, remat: str = "none",
+            unroll: bool = False):
+    from repro.models.transformer import _unembed
+    from repro.models.layers import embed
+    dtype = jnp.dtype(cfg.dtype)
+    x = embed(params["embed"], tokens, dtype)
+    period = max(cfg.attn_every, 1)
+
+    def body(lp, x, i):
+        h, _ = mamba2_block(lp["mamba"],
+                            apply_norm(lp["norm"], x, cfg.norm_eps), cfg,
+                            unroll=unroll)
+        x = x + h
+        # shared attention every `period` layers (same weights each time)
+        use_attn = (i % period) == (period - 1) if cfg.attn_every else False
+        if cfg.attn_every:
+            x = jax.lax.cond(
+                use_attn,
+                lambda x: _shared_block(params, x, cfg)[0],
+                lambda x: x,
+                x)
+        return x
+
+    if remat == "full":
+        body = jax.checkpoint(body)
+    elif remat == "dots":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+
+    def scan_fn(carry, lp_i):
+        x, i = carry
+        lp = lp_i
+        x = body(lp, x, i)
+        return (x, i + 1), None
+
+    (x, _), _ = maybe_scan(scan_fn, (x, jnp.int32(0)), params["layers"],
+                           unroll=unroll)
+    return _unembed(params, x, cfg)
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_seq: int) -> dict:
+    d_inner, H, P, N = dims(cfg)
+    n_attn = cfg.n_layers // max(cfg.attn_every, 1) if cfg.attn_every else 0
+    window = cfg.sliding_window or max_seq
+    cache_len = min(window, max_seq)
+    dtype = jnp.dtype(cfg.dtype)
+    return {
+        "conv": jnp.zeros((cfg.n_layers, batch, cfg.ssm.conv_width - 1,
+                           d_inner), dtype),
+        "ssm": jnp.zeros((cfg.n_layers, batch, H, N, P), jnp.float32),
+        "attn_k": jnp.zeros((max(n_attn, 1), batch, cache_len,
+                             cfg.n_kv_heads, cfg.hd), dtype),
+        "attn_v": jnp.zeros((max(n_attn, 1), batch, cache_len,
+                             cfg.n_kv_heads, cfg.hd), dtype),
+    }
+
+
+def decode_step(params, token, state, index, cfg: ModelConfig):
+    """One decode step; sliding-window KV for the shared attention blocks."""
+    from repro.models.transformer import _unembed
+    from repro.models.layers import embed
+    dtype = jnp.dtype(cfg.dtype)
+    x = embed(params["embed"], token, dtype)
+    period = max(cfg.attn_every, 1)
+    cache_len = state["attn_k"].shape[2]
+    widx = jnp.mod(index, cache_len)  # ring-buffer write position
+
+    new_conv, new_ssm = [], []
+    new_k = state["attn_k"]
+    new_v = state["attn_v"]
+    a_i = 0
+    for i in range(cfg.n_layers):
+        lp = jax.tree.map(lambda a: a[i], params["layers"])
+        h, (cc, ss) = mamba2_block(
+            lp["mamba"], apply_norm(lp["norm"], x, cfg.norm_eps), cfg,
+            conv_carry=state["conv"][i], ssm_state=state["ssm"][i])
+        x = x + h
+        new_conv.append(cc)
+        new_ssm.append(ss)
+        if cfg.attn_every and (i % period) == (period - 1):
+            kv = {"k": new_k[a_i], "v": new_v[a_i]}
+            x, kv2 = _shared_block(params, x, cfg, kv_cache=kv,
+                                   cache_index=widx)
+            new_k = new_k.at[a_i].set(kv2["k"])
+            new_v = new_v.at[a_i].set(kv2["v"])
+            a_i += 1
+    logits = _unembed(params, x, cfg)
+    return logits, {
+        "conv": jnp.stack(new_conv),
+        "ssm": jnp.stack(new_ssm),
+        "attn_k": new_k,
+        "attn_v": new_v,
+    }

@@ -1,0 +1,55 @@
+"""Collective-traffic analysis of lowered/compiled HLO.
+
+``collective_bytes`` sums operand sizes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute in the (partitioned,
+per-device) HLO text — the §Roofline collective term's numerator.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1, "pred": 1,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# e.g.  %ag = bf16[94,4096,8192]{...} all-gather(...)
+_OP_RE = re.compile(
+    r"=\s*(?:\([^)]*\)\s*)?([a-z0-9]+)\[([0-9,]*)\][^=]*?\s"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+
+def _size_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims.strip():
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Per-collective-kind byte totals + counts from HLO text."""
+    bytes_by_kind: dict[str, int] = defaultdict(int)
+    count_by_kind: dict[str, int] = defaultdict(int)
+    for m in _OP_RE.finditer(hlo_text):
+        dtype, dims, kind = m.group(1), m.group(2), m.group(3)
+        # skip the -done halves of async pairs (same tensor twice)
+        if m.group(0).rstrip("(").endswith("-done"):
+            continue
+        bytes_by_kind[kind] += _size_bytes(dtype, dims)
+        count_by_kind[kind] += 1
+    return {
+        "bytes_by_kind": dict(bytes_by_kind),
+        "count_by_kind": dict(count_by_kind),
+        "total_bytes": sum(bytes_by_kind.values()),
+        "total_count": sum(count_by_kind.values()),
+    }

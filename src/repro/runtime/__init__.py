@@ -1,0 +1,3 @@
+"""repro.runtime — the paper's §3.1 'unified view' adapted to multi-pod
+training: resource pool, elastic remeshing, checkpoint/restart, fault &
+straggler handling, and the ASA-driven campaign scheduler."""

@@ -1,0 +1,66 @@
+"""Elastic remeshing: grow/shrink the data (FSDP) axis between stages.
+
+The paper's per-stage resource changes map here to changing the mesh's
+``data`` extent. Because checkpoints are shape-canonical (runtime.checkpoint)
+and shardings are recomputed per mesh (parallel.sharding), a resize is:
+
+  1. (optional) pro-active allocation request via the ASA campaign scheduler,
+  2. drain + snapshot (async checkpoint),
+  3. build the new mesh, recompute ShardingRules,
+  4. restore the snapshot with the new shardings (device_put does the
+     all-to-all placement),
+  5. resume the step function jitted for the new mesh.
+
+``reshard_plan`` additionally reports, per parameter, old/new specs and the
+per-device bytes that must move — the number a scheduler needs to estimate
+resize cost (and what ASA learns to hide in the queue-wait overlap).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import numpy as np
+
+from repro.parallel.sharding import ShardingRules
+
+
+@dataclass
+class ReshardEntry:
+    path: str
+    old_spec: str
+    new_spec: str
+    bytes_total: int
+    moves: bool
+
+
+def reshard_plan(params, old_rules: ShardingRules,
+                 new_rules: ShardingRules) -> list[ReshardEntry]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(params)
+    plan = []
+    for path, leaf in flat:
+        pstr = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        old = old_rules.spec_for(pstr, leaf.shape)
+        new = new_rules.spec_for(pstr, leaf.shape)
+        nbytes = int(np.prod(leaf.shape)) * leaf.dtype.itemsize
+        # a leaf moves if its spec changed OR it is sharded over an axis
+        # whose extent changed (same spec string, different shard shape)
+        axes_used = {a for part in new if part
+                     for a in ((part,) if isinstance(part, str) else part)}
+        size_changed = any(
+            old_rules.mesh.shape.get(a) != new_rules.mesh.shape.get(a)
+            for a in axes_used)
+        plan.append(ReshardEntry(
+            path=pstr, old_spec=str(old), new_spec=str(new),
+            bytes_total=nbytes,
+            moves=(str(old) != str(new)) or size_changed))
+    return plan
+
+
+def apply_resize(tree, new_mesh, new_rules: ShardingRules):
+    """Re-place every leaf under the new mesh's shardings."""
+    shardings = new_rules.tree_shardings(tree)
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, s), tree, shardings)

@@ -1,0 +1,106 @@
+"""Failure detection + straggler mitigation.
+
+Heartbeat tracking per worker (pod slice); a missed-deadline policy drives
+both failure handling (restart from the last checkpoint on a shrunken mesh
+— runtime.elastic) and straggler re-execution (the paper's own
+re-submission-on-miss logic from §4.8, applied to tasks instead of jobs):
+a task is re-issued when its runtime exceeds the q-quantile of completed
+durations by a configurable factor.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import numpy as np
+
+
+@dataclass
+class WorkerState:
+    id: int
+    last_heartbeat: float
+    healthy: bool = True
+
+
+class HeartbeatTracker:
+    def __init__(self, timeout_s: float = 60.0):
+        self.timeout_s = timeout_s
+        self.workers: dict[int, WorkerState] = {}
+        self.on_failure: list[Callable[[int], None]] = []
+
+    def register(self, worker_id: int, now: float) -> None:
+        self.workers[worker_id] = WorkerState(worker_id, now)
+
+    def beat(self, worker_id: int, now: float) -> None:
+        w = self.workers.get(worker_id)
+        if w is not None:
+            w.last_heartbeat = now
+            w.healthy = True
+
+    def sweep(self, now: float) -> list[int]:
+        """Mark/report newly failed workers."""
+        failed = []
+        for w in self.workers.values():
+            if w.healthy and now - w.last_heartbeat > self.timeout_s:
+                w.healthy = False
+                failed.append(w.id)
+                for cb in self.on_failure:
+                    cb(w.id)
+        return failed
+
+    def healthy_count(self) -> int:
+        return sum(1 for w in self.workers.values() if w.healthy)
+
+
+@dataclass
+class StragglerPolicy:
+    """Deadline = quantile(completed) × factor (+ floor)."""
+    quantile: float = 0.9
+    factor: float = 2.0
+    min_samples: int = 5
+    floor_s: float = 1.0
+
+    def deadline(self, completed_durations: list[float]) -> Optional[float]:
+        if len(completed_durations) < self.min_samples:
+            return None
+        q = float(np.quantile(np.asarray(completed_durations),
+                              self.quantile))
+        return max(q * self.factor, self.floor_s)
+
+
+@dataclass
+class TaskAttempt:
+    task_id: int
+    started_at: float
+    finished_at: Optional[float] = None
+
+
+class StragglerMitigator:
+    """Tracks per-task attempts; tells the runner which to re-issue."""
+
+    def __init__(self, policy: StragglerPolicy | None = None):
+        self.policy = policy or StragglerPolicy()
+        self.attempts: dict[int, list[TaskAttempt]] = {}
+        self.durations: list[float] = []
+
+    def start(self, task_id: int, now: float) -> None:
+        self.attempts.setdefault(task_id, []).append(TaskAttempt(task_id, now))
+
+    def finish(self, task_id: int, now: float) -> None:
+        for a in self.attempts.get(task_id, []):
+            if a.finished_at is None:
+                a.finished_at = now
+                self.durations.append(now - a.started_at)
+                break
+
+    def stragglers(self, now: float) -> list[int]:
+        d = self.policy.deadline(self.durations)
+        if d is None:
+            return []
+        out = []
+        for tid, atts in self.attempts.items():
+            running = [a for a in atts if a.finished_at is None]
+            if running and all(now - a.started_at > d for a in running):
+                out.append(tid)
+        return out

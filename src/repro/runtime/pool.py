@@ -1,0 +1,98 @@
+"""Global resource pool over multiple batch allocations (paper §3.1).
+
+The Mesos 'unified view' adapted to pod-sliced accelerator fleets: each
+batch job that starts contributes an Allocation (a set of slices); the pool
+presents them as one elastic inventory from which stages claim resources.
+Offer/claim semantics mirror Mesos offers; revocation mirrors preemption /
+node failure (the fault module drives it).
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+
+@dataclass
+class Allocation:
+    """One batch-system allocation (a job that started)."""
+    id: int
+    slices: int                  # pod slices (or nodes) granted
+    expires_at: Optional[float] = None
+    healthy: bool = True
+
+
+@dataclass
+class Claim:
+    id: int
+    slices: int
+    alloc_ids: list[int]
+
+
+class ResourcePool:
+    def __init__(self):
+        self._allocs: dict[int, Allocation] = {}
+        self._claims: dict[int, Claim] = {}
+        self._ids = itertools.count(1)
+        self._claimed_per_alloc: dict[int, int] = {}
+        self.on_revoke: list[Callable[[Claim], None]] = []
+
+    # ------------------------------------------------------------- supply
+    def add_allocation(self, slices: int,
+                       expires_at: Optional[float] = None) -> Allocation:
+        a = Allocation(next(self._ids), slices, expires_at)
+        self._allocs[a.id] = a
+        self._claimed_per_alloc[a.id] = 0
+        return a
+
+    def remove_allocation(self, alloc_id: int) -> list[Claim]:
+        """Allocation ended/failed: revoke claims that used it."""
+        self._allocs.pop(alloc_id, None)
+        self._claimed_per_alloc.pop(alloc_id, None)
+        hit = [c for c in self._claims.values() if alloc_id in c.alloc_ids]
+        for c in hit:
+            del self._claims[c.id]
+            for cb in self.on_revoke:
+                cb(c)
+        return hit
+
+    # ------------------------------------------------------------- demand
+    def available(self) -> int:
+        return sum(
+            a.slices - self._claimed_per_alloc.get(a.id, 0)
+            for a in self._allocs.values() if a.healthy)
+
+    def claim(self, slices: int) -> Optional[Claim]:
+        """First-fit claim across allocations (may span several)."""
+        if slices > self.available():
+            return None
+        remaining = slices
+        used: list[int] = []
+        for a in self._allocs.values():
+            if not a.healthy:
+                continue
+            free = a.slices - self._claimed_per_alloc[a.id]
+            take = min(free, remaining)
+            if take > 0:
+                self._claimed_per_alloc[a.id] += take
+                used.append(a.id)
+                remaining -= take
+            if remaining == 0:
+                break
+        c = Claim(next(self._ids), slices, used)
+        self._claims[c.id] = c
+        return c
+
+    def release(self, claim: Claim) -> None:
+        if claim.id not in self._claims:
+            return
+        del self._claims[claim.id]
+        # proportional release (claims record only the alloc ids)
+        remaining = claim.slices
+        for aid in claim.alloc_ids:
+            if aid not in self._claimed_per_alloc:
+                continue
+            give = min(self._claimed_per_alloc[aid], remaining)
+            self._claimed_per_alloc[aid] -= give
+            remaining -= give

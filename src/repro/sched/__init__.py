@@ -1,0 +1,2 @@
+"""repro.sched — batch-queue substrate: simulator, centers, workflows,
+submission strategies (BigJob / Per-Stage / ASA / ASA-Naive)."""

@@ -1,0 +1,100 @@
+"""Family-dispatched serving steps: prefill and single-token decode.
+
+``decode_*`` shapes lower THESE functions (one new token against a KV cache
+/ recurrent state of seq_len), never train_step.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def make_prefill_step(cfg: ModelConfig, *, use_flash: bool = False,
+                      unroll: bool = False):
+    fam = cfg.family
+
+    if fam in ("dense", "moe"):
+        from repro.models import transformer as T
+
+        def prefill(params, tokens):
+            return T.prefill(params, tokens, cfg, use_flash=use_flash,
+                             unroll=unroll)
+        return prefill
+
+    if fam == "vlm":
+        from repro.models import transformer as T
+
+        def prefill(params, tokens, patch_embeds):
+            logits = T.forward(params, tokens, cfg,
+                               prefix_embeds=patch_embeds,
+                               use_flash=use_flash, unroll=unroll)
+            return logits[:, -1:, :]
+        return prefill
+
+    if fam == "audio":
+        from repro.models import encdec as E
+
+        def prefill(params, tokens, frames):
+            enc = E.encode(params, frames, cfg, unroll=unroll)
+            return E.decode_train(params, tokens, enc, cfg,
+                                  unroll=unroll)[:, -1:, :]
+        return prefill
+
+    if fam == "ssm":
+        from repro.models import rwkv6 as R
+
+        def prefill(params, tokens):
+            return R.forward(params, tokens, cfg, unroll=unroll)[:, -1:, :]
+        return prefill
+
+    if fam == "hybrid":
+        from repro.models import zamba2 as Z
+
+        def prefill(params, tokens):
+            return Z.forward(params, tokens, cfg, unroll=unroll)[:, -1:, :]
+        return prefill
+
+    raise ValueError(fam)
+
+
+def make_decode_step(cfg: ModelConfig, *, unroll: bool = False):
+    fam = cfg.family
+
+    if fam in ("dense", "moe", "vlm"):
+        from repro.models import transformer as T
+
+        def decode(params, token, caches, index):
+            return T.decode_step(params, token, caches, index, cfg,
+                                 unroll=unroll)
+        return decode
+
+    if fam == "audio":
+        from repro.models import encdec as E
+
+        def decode(params, token, caches, index):
+            return E.decode_step(params, token, caches, index, cfg,
+                                 unroll=unroll)
+        return decode
+
+    if fam == "ssm":
+        from repro.models import rwkv6 as R
+
+        def decode(params, token, state):
+            return R.decode_step(params, token, state, cfg, unroll=unroll)
+        return decode
+
+    if fam == "hybrid":
+        from repro.models import zamba2 as Z
+
+        def decode(params, token, state, index):
+            return Z.decode_step(params, token, state, index, cfg)
+        return decode
+
+    raise ValueError(fam)
+
+
+def greedy_sample(logits: jax.Array) -> jax.Array:
+    return jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]

@@ -1,0 +1,55 @@
+"""Error-feedback int8 gradient compression (beyond-paper distributed trick).
+
+Per-tensor symmetric int8 quantization with an error-feedback residual
+(Seide et al. / EF-SGD): the quantization error is carried into the next
+step, so compression is unbiased in the long run and convergence is
+preserved. At 1000+-node scale this cuts cross-pod (DCN) gradient traffic
+4× vs f32 / 2× vs bf16; the roofline collective term scales accordingly.
+
+Usage in a train step:
+    q, scale, new_resid = compress(grad + resid)
+    grad_hat = decompress(q, scale)          # what gets all-reduced
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Compressed(NamedTuple):
+    q: jax.Array        # int8 payload
+    scale: jax.Array    # f32 scalar per tensor
+
+
+def compress(x: jax.Array) -> tuple[Compressed, jax.Array]:
+    """Returns (compressed, residual error)."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    err = xf - q.astype(jnp.float32) * scale
+    return Compressed(q=q, scale=scale), err
+
+
+def decompress(c: Compressed) -> jax.Array:
+    return c.q.astype(jnp.float32) * c.scale
+
+
+def compress_tree(grads, residuals):
+    """Apply EF-int8 to every leaf. residuals: same pytree (or zeros)."""
+    def one(g, r):
+        c, err = compress(g.astype(jnp.float32) + r)
+        return decompress(c), err
+    pairs = jax.tree.map(one, grads, residuals)
+    ghat = jax.tree.map(lambda p: p[0], pairs,
+                        is_leaf=lambda x: isinstance(x, tuple))
+    resid = jax.tree.map(lambda p: p[1], pairs,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return ghat, resid
+
+
+def zeros_like_residuals(params):
+    return jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)

@@ -1,0 +1,63 @@
+"""Decode-path == teacher-forced forward (per family)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS
+from repro.train.step import init_params
+
+B, S = 2, 16
+
+
+def test_dense_prefill_decode_matches_forward():
+    cfg = ARCHS["qwen2-0.5b"].reduced()
+    key = jax.random.PRNGKey(0)
+    params = init_params(key, cfg)
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    from repro.models.transformer import (decode_step, forward,
+                                          init_kv_caches, prefill)
+    full = forward(params, toks, cfg)                      # (B,S,V)
+    logits_pf, pf_caches = prefill(params, toks[:, :S // 2], cfg)
+    np.testing.assert_allclose(
+        np.asarray(logits_pf[:, 0]), np.asarray(full[:, S // 2 - 1]),
+        atol=2e-2)
+    caches = init_kv_caches(cfg, B, S)
+    caches = jax.tree.map(
+        lambda c, p: jax.lax.dynamic_update_slice_in_dim(
+            c, p.astype(c.dtype), 0, axis=2), caches, pf_caches)
+    # decode the second half token by token
+    for t in range(S // 2, S):
+        logits, caches = decode_step(params, toks[:, t:t + 1], caches,
+                                     jnp.int32(t), cfg)
+        np.testing.assert_allclose(np.asarray(logits[:, 0]),
+                                   np.asarray(full[:, t]), atol=2e-2)
+
+
+def test_rwkv_decode_matches_forward():
+    cfg = ARCHS["rwkv6-3b"].reduced()
+    key = jax.random.PRNGKey(1)
+    params = init_params(key, cfg)
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    from repro.models.rwkv6 import decode_step, forward, init_decode_state
+    full = forward(params, toks, cfg)
+    state = init_decode_state(cfg, B)
+    for t in range(S):
+        logits, state = decode_step(params, toks[:, t:t + 1], state, cfg)
+        np.testing.assert_allclose(np.asarray(logits[:, 0]),
+                                   np.asarray(full[:, t]), atol=3e-2)
+
+
+def test_zamba_decode_matches_forward():
+    cfg = ARCHS["zamba2-1.2b"].reduced()
+    key = jax.random.PRNGKey(2)
+    params = init_params(key, cfg)
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    from repro.models.zamba2 import decode_step, forward, init_decode_state
+    full = forward(params, toks, cfg)
+    state = init_decode_state(cfg, B, S)
+    for t in range(S):
+        logits, state = decode_step(params, toks[:, t:t + 1], state,
+                                    jnp.int32(t), cfg)
+        np.testing.assert_allclose(np.asarray(logits[:, 0]),
+                                   np.asarray(full[:, t]), atol=3e-2)

@@ -1,0 +1,97 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), shape/dtype sweeps."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.moe_gmm.kernel import grouped_matmul
+from repro.kernels.moe_gmm.ref import grouped_ffn_ref, grouped_matmul_ref
+from repro.kernels.moe_gmm.ops import grouped_ffn
+from repro.kernels.rwkv6_scan.kernel import wkv6 as wkv6_kernel
+from repro.kernels.rwkv6_scan.ops import wkv6 as wkv6_ops
+from repro.kernels.rwkv6_scan.ref import wkv6_ref
+
+
+@pytest.mark.parametrize("B,S,H,hd,causal,window", [
+    (2, 256, 4, 64, True, 0),
+    (1, 128, 2, 128, True, 0),
+    (2, 256, 4, 64, False, 0),
+    (1, 256, 2, 64, True, 128),
+])
+def test_flash_attention_sweep(B, S, H, hd, causal, window):
+    ks = jax.random.split(jax.random.PRNGKey(B * S), 3)
+    q, k, v = (jax.random.normal(ks[i], (B, S, H, hd)) for i in range(3))
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          interpret=True)
+    exp = attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_dtypes(dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q, k, v = (jax.random.normal(ks[i], (1, 128, 2, 64)).astype(dtype)
+               for i in range(3))
+    out = flash_attention(q, k, v, causal=True, interpret=True)
+    exp = attention_ref(q, k, v, causal=True)
+    atol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32), atol=atol)
+
+
+@pytest.mark.parametrize("E,C,D,F", [
+    (4, 128, 256, 512), (2, 256, 512, 512), (8, 128, 128, 1024),
+])
+def test_grouped_matmul_sweep(E, C, D, F):
+    ks = jax.random.split(jax.random.PRNGKey(E), 2)
+    x = jax.random.normal(ks[0], (E, C, D))
+    w = jax.random.normal(ks[1], (E, D, F))
+    out = grouped_matmul(x, w, interpret=True)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(grouped_matmul_ref(x, w)),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_grouped_ffn_matches_ref():
+    ks = jax.random.split(jax.random.PRNGKey(7), 4)
+    x = jax.random.normal(ks[0], (2, 128, 256)) * 0.1
+    wg = jax.random.normal(ks[1], (2, 256, 512)) * 0.05
+    wu = jax.random.normal(ks[2], (2, 256, 512)) * 0.05
+    wd = jax.random.normal(ks[3], (2, 512, 256)) * 0.05
+    out = grouped_ffn(x, wg, wu, wd, force_interpret=True)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(grouped_ffn_ref(x, wg, wu, wd)),
+                               atol=1e-4)
+
+
+@pytest.mark.parametrize("B,S,H,K,chunk", [
+    (2, 128, 3, 16, 32), (1, 256, 2, 64, 64), (2, 64, 4, 8, 16),
+])
+def test_wkv6_kernel_sweep(B, S, H, K, chunk):
+    ks = jax.random.split(jax.random.PRNGKey(B + S), 5)
+    r, k, v = (jax.random.normal(ks[i], (B, S, H, K)) for i in range(3))
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (B, S, H, K))) * 0.5 + 0.45
+    u = jax.random.normal(ks[4], (H, K)) * 0.1
+    out, state = wkv6_kernel(r, k, v, w, u, chunk=chunk, interpret=True)
+    exp_o, exp_s = wkv6_ref(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp_o), atol=2e-4)
+    np.testing.assert_allclose(np.asarray(state), np.asarray(exp_s),
+                               atol=2e-5)
+
+
+def test_wkv6_with_carried_state():
+    ks = jax.random.split(jax.random.PRNGKey(9), 6)
+    B, S, H, K = 2, 64, 4, 8
+    r, k, v = (jax.random.normal(ks[i], (B, S, H, K)) for i in range(3))
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (B, S, H, K))) * 0.5 + 0.45
+    u = jax.random.normal(ks[4], (H, K)) * 0.1
+    st0 = jax.random.normal(ks[5], (B, H, K, K)) * 0.3
+    out, state = wkv6_ops(r, k, v, w, u, chunk=16, state0=st0,
+                          force_interpret=True)
+    exp_o, exp_s = wkv6_ref(r, k, v, w, u, state0=st0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp_o), atol=2e-4)
+    np.testing.assert_allclose(np.asarray(state), np.asarray(exp_s),
+                               atol=2e-5)

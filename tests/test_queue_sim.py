@@ -1,0 +1,71 @@
+"""Queue-simulator invariants."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.sched.centers import HPC2N, UPPMAX
+from repro.sched.queue_sim import QueueSim
+
+
+def test_core_conservation():
+    sim = QueueSim(HPC2N, seed=0)
+    total = HPC2N.total_cores
+    for t in range(0, 20000, 2000):
+        sim.run_until(t)
+        running = sum(sim.jobs[j].cores for _, j in sim.running
+                      if not sim.jobs[j].canceled)
+        assert 0 <= sim.free_cores <= total
+        assert running + sim.free_cores == total
+
+
+def test_job_lifecycle_and_fcfs_wait():
+    sim = QueueSim(HPC2N, seed=1)
+    sim.run_until(3600)
+    j = sim.submit(28, 600, user="t")
+    sim.run_until_job_ends(j)
+    assert j.start_time is not None and j.end_time == j.start_time + 600
+    assert j.wait_time >= 0
+
+
+def test_dependency_blocks_start():
+    sim = QueueSim(HPC2N, seed=2)
+    sim.run_until(1800)
+    a = sim.submit(28, 900)
+    b = sim.submit(28, 300, depend_on=a.id)
+    sim.run_until_job_ends(b)
+    assert b.start_time >= a.end_time
+
+
+def test_cancel_queued_and_running():
+    sim = QueueSim(HPC2N, seed=3)
+    sim.run_until(1800)
+    a = sim.submit(28, 5000)
+    sim.run_until_job_starts(a)
+    sim.cancel(a)
+    # cores returned (and possibly immediately re-consumed by queued jobs)
+    assert a.canceled and all(jid != a.id for _, jid in sim.running)
+    b = sim.submit(28, 50)
+    sim.cancel(b)
+    assert b.canceled
+
+
+def test_hooks_fire_even_if_already_started():
+    sim = QueueSim(HPC2N, seed=4)
+    sim.run_until(1800)
+    j = sim.submit(1, 100)
+    sim.run_until_job_starts(j)
+    fired = []
+    sim.on_start(j, lambda job: fired.append(job.id))
+    assert fired == [j.id]
+
+
+@given(st.integers(min_value=0, max_value=10_000))
+@settings(max_examples=5, deadline=None)
+def test_random_streams_keep_invariants(seed):
+    sim = QueueSim(UPPMAX, seed=seed)
+    sim.run_until(7200)
+    running = sum(sim.jobs[j].cores for _, j in sim.running
+                  if not sim.jobs[j].canceled)
+    assert running + sim.free_cores == UPPMAX.total_cores
+    assert 0.0 <= sim.utilization() <= 1.0

@@ -1,0 +1,42 @@
+"""Theorem 1 property test: empirical regret stays under the bound."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import asa
+from repro.core.bins import make_bins
+from repro.core.losses import zero_one
+from repro.core.regret import empirical_regret, theorem1_bound
+
+
+@given(st.integers(min_value=0, max_value=2**31 - 1),
+       st.integers(min_value=3, max_value=16))
+@settings(max_examples=15, deadline=None)
+def test_regret_under_theorem1_bound(seed, m):
+    """Random step-changing truth; default (bandit) policy; δ=0.05."""
+    T = 400
+    rng = np.random.default_rng(seed)
+    n_seg = rng.integers(1, 6)
+    truth = np.repeat(
+        np.exp(rng.uniform(np.log(10), np.log(1e5), n_seg)),
+        -(-T // n_seg))[:T].astype(np.float32)
+
+    bins = jnp.asarray(make_bins(m), jnp.float32)
+    s = asa.init(m, jax.random.PRNGKey(seed % 2**31))
+    all_losses = np.stack(
+        [np.asarray(zero_one(bins, jnp.float32(w))) for w in truth])
+    chosen = []
+    g = jnp.float32(1.0)
+    for t in range(T):
+        s, a = asa.step(s, jnp.asarray(all_losses[t]), g, policy="default")
+        chosen.append(all_losses[t][int(a)])
+    reg = empirical_regret(np.asarray(chosen), all_losses)
+    bound = theorem1_bound(T, m, int(s.rounds), delta=0.05)
+    assert reg <= bound, (reg, bound)
+
+
+def test_bound_monotone_in_t_and_rounds():
+    assert theorem1_bound(100, 53, 10) < theorem1_bound(1000, 53, 10)
+    assert theorem1_bound(100, 53, 10) < theorem1_bound(100, 53, 50)

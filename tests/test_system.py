@@ -1,0 +1,71 @@
+"""End-to-end behaviour tests for the paper's system.
+
+1. The full reproduction pipeline: ASA vs BigJob vs Per-Stage on the
+   calibrated simulator reproduces the paper's ordering (Table 1).
+2. The training framework end-to-end: loss decreases, checkpoint-restart
+   resumes exactly, serve generates.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+
+def test_paper_ordering_on_busy_center():
+    """Core claim: CH(ASA) == CH(Per-Stage) < CH(BigJob) and
+    makespan(ASA) ≈ makespan(BigJob) < makespan(Per-Stage)."""
+    from repro.sched.centers import UPPMAX
+    from repro.sched.queue_sim import QueueSim
+    from repro.sched.strategies import (ASAEstimator, run_asa, run_bigjob,
+                                        run_per_stage)
+    from repro.sched.workflows import MONTAGE
+
+    est = ASAEstimator(seed=0)
+    # warm-up run for the estimator (paper keeps state across runs)
+    sim = QueueSim(UPPMAX, seed=21)
+    sim.run_until(3600)
+    run_asa(sim, MONTAGE, 640, "uppmax", est)
+
+    results = {}
+    for name, runner in [
+        ("bigjob", run_bigjob), ("per_stage", run_per_stage),
+        ("asa", lambda s, w, n, c: run_asa(s, w, n, c, est)),
+    ]:
+        sim = QueueSim(UPPMAX, seed=22)
+        sim.run_until(3600)
+        results[name] = runner(sim, MONTAGE, 640, "uppmax")
+
+    r = results
+    assert r["asa"].core_hours == pytest.approx(r["per_stage"].core_hours)
+    assert r["asa"].core_hours < 0.6 * r["bigjob"].core_hours
+    assert r["asa"].makespan_s < r["per_stage"].makespan_s
+    # ASA within 2x of BigJob's makespan even on a 15h-wait queue
+    assert r["asa"].makespan_s < 2.0 * r["bigjob"].makespan_s
+
+
+def test_train_checkpoint_restart_exact(tmp_path):
+    """Kill-and-restart equals uninterrupted run (fault tolerance)."""
+    from repro.launch.train import train
+    r1 = train("qwen2-0.5b", reduced=True, steps=6, batch=2, seq=32,
+               ckpt_dir=None, log_every=1)
+    ck = str(tmp_path / "ck")
+    train("qwen2-0.5b", reduced=True, steps=4, batch=2, seq=32,
+          ckpt_dir=ck, ckpt_every=4, log_every=1)
+    r2 = train("qwen2-0.5b", reduced=True, steps=6, batch=2, seq=32,
+               ckpt_dir=ck, ckpt_every=100, log_every=1)
+    assert r2["final_loss"] == pytest.approx(r1["final_loss"], rel=1e-3)
+
+
+def test_training_reduces_loss():
+    from repro.launch.train import train
+    r = train("gemma-2b", reduced=True, steps=25, batch=4, seq=64,
+              log_every=24)
+    assert r["final_loss"] < r["first_loss"]
+
+
+def test_serve_generates():
+    from repro.launch.serve import serve
+    r = serve("qwen2-0.5b", reduced=True, batch=2, prompt_len=8, gen=4)
+    assert r["tokens"].shape == (2, 4)
+    assert int(jnp.max(r["tokens"])) < 256
