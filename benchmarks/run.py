@@ -3,10 +3,15 @@
 Prints ``name,us_per_call,derived`` CSV rows. The roofline benchmark
 (benchmarks.roofline) runs as its own process (it needs 512 host devices
 before jax init); this driver summarizes its JSON output if present.
+
+``--engine event`` (default) drives the discrete-event QueueSim campaign;
+``--engine xsim`` runs the same strategy comparison on the vectorized
+fleet engine (repro.xsim) — thousands of scenarios in one jitted program.
 """
 
 from __future__ import annotations
 
+import argparse
 import json
 from pathlib import Path
 
@@ -48,6 +53,42 @@ def dryrun_summary() -> None:
     print(f"dryrun/all_cells,0,ok={ok};fail={fail};skip={skip}")
 
 
+def xsim_main(n_seeds: int = 4) -> None:
+    """Strategy comparison on the batched engine + its throughput row."""
+    import time
+
+    import numpy as np
+
+    from repro.xsim import policies
+    from repro.xsim.grid import XSimConfig, make_grid, run_grid, warm_fleet
+
+    cfg = XSimConfig(n_warm=24, n_backlog=16, n_arrivals=24, max_stages=9,
+                     t0=3600.0)
+    grid = make_grid(cfg, n_seeds=n_seeds, shrink=1 / 64.0)
+    fleet = policies.init_fleet(int(grid.geo_idx.max()) + 1)
+    fleet = warm_fleet(fleet, grid, rounds=3)
+    t0 = time.time()
+    _, m = run_grid(grid, fleet, pred_seed=7)
+    elapsed = time.time() - t0
+    m = {k: np.asarray(v) for k, v in m.items()}
+
+    by: dict[str, list[int]] = {}
+    for i, lab in enumerate(grid.labels):
+        by.setdefault(lab["strategy"], []).append(i)
+    base = {k: min(float(np.mean(m[k][idx])) for idx in by.values())
+            for k in ("twt_s", "makespan_s", "core_hours")}
+    for strat, idx in sorted(by.items()):
+        tw = float(np.mean(m["twt_s"][idx]))
+        mk = float(np.mean(m["makespan_s"][idx]))
+        ch = float(np.mean(m["core_hours"][idx]))
+        print(f"xsim_strategies/{strat},{elapsed * 1e6 / grid.n:.0f},"
+              f"twt=+{(tw / max(base['twt_s'], 1e-9) - 1) * 100:.0f}%;"
+              f"makespan=+{(mk / base['makespan_s'] - 1) * 100:.0f}%;"
+              f"ch=+{(ch / base['core_hours'] - 1) * 100:.0f}%")
+    print(f"xsim_strategies/n,0,scenarios={grid.n};"
+          f"scenarios_per_sec={grid.n / elapsed:.0f}")
+
+
 def main() -> None:
     import time
     from collections import defaultdict
@@ -81,4 +122,10 @@ def main() -> None:
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--engine", choices=("event", "xsim"), default="event")
+    args = ap.parse_args()
+    if args.engine == "xsim":
+        xsim_main()
+    else:
+        main()

@@ -1,0 +1,78 @@
+"""xsim fleet-throughput benchmark: scenarios/second of the batched engine.
+
+Builds the full scenario grid (centers × scales × workflows × strategies
+× seeds), runs it as ONE jitted ``vmap(lax.scan)`` program, and reports
+scenarios/sec — the number the perf trajectory tracks from this PR on.
+
+CSV rows: ``name,us_per_call,derived`` (benchmarks/run.py convention).
+
+  python -m benchmarks.xsim_throughput            # ≥1000 scenarios
+  python -m benchmarks.xsim_throughput --smoke    # CI-sized quick pass
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.xsim import policies
+from repro.xsim.grid import XSimConfig, make_grid, run_grid
+
+
+def bench(n_seeds: int, reps: int, label: str,
+          freed_mode: str = "ref") -> None:
+    cfg = XSimConfig(n_warm=16, n_backlog=12, n_arrivals=16, max_stages=9,
+                     t0=3600.0)
+    grid = make_grid(cfg, n_seeds=n_seeds, shrink=1 / 64.0)
+    fleet = policies.init_fleet(int(grid.geo_idx.max()) + 1)
+
+    t0 = time.time()
+    final, m = run_grid(grid, fleet, freed_mode=freed_mode)
+    jax.block_until_ready(final)
+    compile_s = time.time() - t0
+
+    t0 = time.time()
+    for r in range(reps):
+        final, m = run_grid(grid, fleet, pred_seed=r + 2,
+                            freed_mode=freed_mode)
+        jax.block_until_ready(final)
+    steady_s = (time.time() - t0) / reps
+
+    done = float(np.mean(np.asarray(m["wf_done"])
+                         / np.maximum(np.asarray(m["wf_total"]), 1)))
+    sps = grid.n / steady_s
+    print(f"xsim_throughput/{label},{steady_s * 1e6 / grid.n:.0f},"
+          f"scenarios_per_sec={sps:.0f};n_scenarios={grid.n};"
+          f"n_steps={cfg.n_steps};max_jobs={cfg.max_jobs};"
+          f"compile_s={compile_s:.1f};wf_done_frac={done:.3f};"
+          f"backend={jax.default_backend()};freed_mode={freed_mode}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small CI-sized run (fast, CPU-friendly)")
+    ap.add_argument("--reps", type=int, default=None)
+    ap.add_argument("--freed-mode", choices=("auto", "ref", "interpret",
+                                             "tpu"), default="auto",
+                    help="reservation-scan backend; auto = Pallas kernel "
+                         "on TPU, jnp reference elsewhere")
+    args = ap.parse_args()
+    mode = args.freed_mode
+    if mode == "auto":
+        mode = "tpu" if jax.default_backend() == "tpu" else "ref"
+    if args.smoke:
+        # 54 cells × 2 seeds = 108 scenarios
+        bench(n_seeds=2, reps=args.reps or 1, label="smoke",
+              freed_mode=mode)
+    else:
+        # 54 cells × 19 seeds = 1026 scenarios in one batched program
+        bench(n_seeds=19, reps=args.reps or 2, label="sweep1k",
+              freed_mode=mode)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,8 +1,12 @@
 """Sharded checkpoint/restore (msgpack + zstd), elastic across mesh shapes.
 
 Layout: <dir>/step_<n>/
-  manifest.json            — tree structure, shapes, dtypes, chunking
-  <leaf-id>.bin            — zstd-compressed little-endian ndarray bytes
+  manifest.json            — tree structure, shapes, dtypes, chunking, codec
+  <leaf-id>.bin            — compressed little-endian ndarray bytes
+
+Compression is zstd when the ``zstandard`` package is available and falls
+back to stdlib ``zlib`` otherwise; the codec used at save time is recorded
+in the manifest so checkpoints restore correctly across environments.
 
 Design points for 1000+-node deployments (documented here, exercised at
 container scale by the tests):
@@ -22,13 +26,39 @@ from __future__ import annotations
 
 import json
 import threading
+import zlib
 from pathlib import Path
 
 import jax
 import numpy as np
-import zstandard
 
-_DCTX = zstandard.ZstdDecompressor()
+try:
+    import zstandard
+except ModuleNotFoundError:
+    zstandard = None
+
+
+def _compressor(level: int):
+    if zstandard is not None:
+        cctx = zstandard.ZstdCompressor(level=level)
+        return "zstd", cctx.compress
+    # zstd accepts levels up to 22; zlib tops out at 9
+    return "zlib", lambda data: zlib.compress(data, min(level, 9))
+
+
+_DCTX = zstandard.ZstdDecompressor() if zstandard is not None else None
+
+
+def _decompress(codec: str, payload: bytes) -> bytes:
+    if codec == "zstd":
+        if _DCTX is None:
+            raise RuntimeError(
+                "checkpoint was written with zstd but the 'zstandard' "
+                "package is not installed in this environment")
+        return _DCTX.decompress(payload)
+    if codec == "zlib":
+        return zlib.decompress(payload)
+    raise ValueError(f"unknown checkpoint codec {codec!r}")
 
 
 def _leaf_paths(tree):
@@ -46,12 +76,12 @@ def save(tree, directory: str | Path, step: int, *, level: int = 3) -> Path:
     tmp = directory / f"_tmp_step_{step}"
     final = directory / f"step_{step}"
     tmp.mkdir(parents=True, exist_ok=True)
-    cctx = zstandard.ZstdCompressor(level=level)
+    codec, compress = _compressor(level)
     leaves, _ = _leaf_paths(tree)
-    manifest = {"step": step, "leaves": []}
+    manifest = {"step": step, "codec": codec, "leaves": []}
     for name, leaf in leaves:
         arr = np.asarray(jax.device_get(leaf))
-        payload = cctx.compress(np.ascontiguousarray(arr).tobytes())
+        payload = compress(np.ascontiguousarray(arr).tobytes())
         (tmp / f"{name}.bin").write_bytes(payload)
         manifest["leaves"].append({
             "name": name, "shape": list(arr.shape), "dtype": str(arr.dtype),
@@ -95,6 +125,7 @@ def restore(example_tree, directory: str | Path, step: int,
     sharded — onto whatever mesh those shardings reference (elastic)."""
     directory = Path(directory) / f"step_{step}"
     manifest = json.loads((directory / "manifest.json").read_text())
+    codec = manifest.get("codec", "zstd")  # pre-codec checkpoints were zstd
     by_name = {m["name"]: m for m in manifest["leaves"]}
     leaves, treedef = _leaf_paths(example_tree)
     shard_leaves = (jax.tree_util.tree_leaves(shardings)
@@ -102,7 +133,7 @@ def restore(example_tree, directory: str | Path, step: int,
     out = []
     for (name, leaf), sh in zip(leaves, shard_leaves):
         meta = by_name[name]
-        raw = _DCTX.decompress((directory / f"{name}.bin").read_bytes())
+        raw = _decompress(codec, (directory / f"{name}.bin").read_bytes())
         arr = np.frombuffer(raw, dtype=np.dtype(meta["dtype"])).reshape(
             meta["shape"]).copy()
         if sh is not None:

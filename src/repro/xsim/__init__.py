@@ -1,0 +1,22 @@
+"""repro.xsim — vectorized fleet-scale scenario engine for batched ASA
+evaluation.
+
+A second, array-native simulation stack beside the event-driven
+``repro.sched.queue_sim``: fixed-slot job tables, ``lax.scan`` event
+stepping, ``jax.vmap`` over thousands of scenarios, a Pallas kernel for
+the EASY-backfill reservation scan. See README.md in this package for the
+design and its approximations.
+"""
+
+from repro.xsim.state import (ASA, BIGJOB, PER_STAGE, POLICY_NAMES,
+                              ScenarioState)
+from repro.xsim.events import simulate, sweep
+from repro.xsim.grid import (ScenarioGrid, XSimConfig, center_params,
+                             make_grid, run_grid)
+from repro.xsim.compare import batched_metrics, metrics
+
+__all__ = [
+    "ASA", "BIGJOB", "PER_STAGE", "POLICY_NAMES", "ScenarioState",
+    "simulate", "sweep", "ScenarioGrid", "XSimConfig", "center_params",
+    "make_grid", "run_grid", "batched_metrics", "metrics",
+]

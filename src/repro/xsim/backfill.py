@@ -1,0 +1,189 @@
+"""Vectorized FCFS + EASY-backfill scheduling pass.
+
+Mirrors ``QueueSim._schedule_pass`` with masked array ops:
+
+  1. *FCFS prefix start* — eligible queued jobs sorted by (submit, row);
+     because core counts are positive the "start from the front while it
+     fits" loop is exactly the maximal prefix whose core cumsum fits in
+     the free cores, so one sort + cumsum starts any number of head jobs.
+  2. *Reservation* — when the queue head does not fit, compute its
+     earliest feasible start (shadow time) and the spare cores at that
+     moment. This is the hot O(n²) scan over the running-job table; a
+     Pallas kernel (`freed_matrix`) computes it batched on accelerator,
+     with a pure-jnp reference used on CPU.
+  3. *Backfill loop* — a short `fori_loop`; each pass starts the first
+     (FCFS order) queued job that fits now AND either drains before the
+     shadow time or fits inside the reservation's spare cores. QueueSim
+     starts arbitrarily many backfill jobs per pass; a bounded loop is the
+     vectorized approximation (any job missed here is reconsidered at the
+     very next event, so with the default 16 passes the divergence is
+     rarely observable).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.xsim.state import DONE, QUEUED, RUNNING, ScenarioState
+
+BF_PASSES = 16  # backfill starts per scheduling pass (QueueSim: unbounded)
+
+
+# ---------------------------------------------------------------- helpers
+def eligible_mask(s: ScenarioState) -> jax.Array:
+    """Queued jobs whose afterok dependency (if any) has completed."""
+    dep = jnp.clip(s.start_dep, 0, s.status.shape[0] - 1)
+    dep_done = jnp.where(s.start_dep < 0, True, s.status[dep] == DONE)
+    return (s.status == QUEUED) & dep_done
+
+
+def fcfs_order(s: ScenarioState, mask: jax.Array):
+    """Stable FCFS ordering of ``mask`` jobs by (submit, row index).
+
+    Returns (order, rank): ``order`` lists job rows FCFS-first (masked-out
+    rows pushed to the back), ``rank[j]`` is row j's queue position.
+    """
+    key = jnp.where(mask, s.submit, jnp.inf)
+    order = jnp.argsort(key)                 # stable → row index tiebreak
+    rank = jnp.argsort(order)
+    return order, rank
+
+
+# ------------------------------------------------- reservation (the O(n²))
+def _freed_math(ends, cores, running):
+    """freed[i] = cores released once every running job ending ≤ end_i ends."""
+    e = jnp.where(running, ends, jnp.inf)
+    c = jnp.where(running, cores, 0.0)
+    before = (e[None, :] <= e[:, None]) & running[None, :]
+    return jnp.sum(jnp.where(before, c[None, :], 0.0), axis=1)
+
+
+def _freed_kernel(ends_ref, cores_ref, run_ref, freed_ref):
+    e = ends_ref[0]
+    r = run_ref[0] > 0
+    c = jnp.where(r, cores_ref[0], 0.0)
+    e = jnp.where(r, e, jnp.inf)
+    before = (e[None, :] <= e[:, None]) & r[None, :]
+    freed_ref[0] = jnp.sum(jnp.where(before, c[None, :], 0.0), axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def freed_matrix(ends, cores, running, *, interpret: bool = False):
+    """Batched Pallas path for `_freed_math`: (B, N) tables → (B, N) freed.
+
+    One grid program per scenario row; the (N, N) end-time comparison
+    matrix lives in VMEM and reduces on the VPU. Used on TPU (or under
+    ``interpret`` for tests); the sweep's default CPU path inlines the
+    jnp reference, keeping `schedule_pass` trivially vmap-able.
+    """
+    B, N = ends.shape
+    return pl.pallas_call(
+        _freed_kernel,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, N), lambda b: (b, 0)),
+            pl.BlockSpec((1, N), lambda b: (b, 0)),
+            pl.BlockSpec((1, N), lambda b: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, N), lambda b: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, N), jnp.float32),
+        interpret=interpret,
+    )(ends.astype(jnp.float32), cores.astype(jnp.float32),
+      running.astype(jnp.float32))
+
+
+def freed_vector(ends, cores, running, *, mode: str = "ref"):
+    """Dispatch the freed-cores scan: jnp reference or the Pallas kernel.
+
+    ``ref``: inline jnp (the CPU default — trivially vmap-able).
+    ``interpret``/``tpu``: the Pallas kernel, run single-scenario; under
+    ``jax.vmap`` the batching rule turns it into the (B, N) grid.
+    """
+    if mode == "ref":
+        return _freed_math(ends, cores, running)
+    if mode in ("interpret", "tpu"):
+        return freed_matrix(ends[None, :], cores[None, :], running[None, :],
+                            interpret=(mode == "interpret"))[0]
+    raise ValueError(f"unknown freed mode {mode!r}")
+
+
+def reservation(ends, cores, running, free, head_cores, freed=None):
+    """EASY reservation: (shadow_time, spare_cores_at_shadow) for the head.
+
+    ``freed`` may be precomputed (e.g. by the Pallas kernel); otherwise the
+    jnp reference is used. Semantics match ``QueueSim._reservation``: walk
+    running jobs by end time until the head fits; no feasible point → +inf.
+    """
+    if freed is None:
+        freed = _freed_math(ends, cores, running)
+    e = jnp.where(running, ends, jnp.inf)
+    ok = running & (free + freed >= head_cores)
+    pick = jnp.argmin(jnp.where(ok, e, jnp.inf))
+    any_ok = jnp.any(ok)
+    shadow = jnp.where(any_ok, e[pick], jnp.inf)
+    extra = jnp.where(any_ok, free + freed[pick] - head_cores, 0.0)
+    return shadow, extra
+
+
+# ------------------------------------------------------- scheduling pass
+def _start_rows(s: ScenarioState, mask: jax.Array, now) -> ScenarioState:
+    started_cores = jnp.sum(jnp.where(mask, s.cores, 0.0))
+    free = s.free - started_cores
+    return s._replace(
+        status=jnp.where(mask, RUNNING, s.status),
+        start=jnp.where(mask, now, s.start),
+        end=jnp.where(mask, now + s.duration, s.end),
+        free=free,
+        min_free=jnp.minimum(s.min_free, free),
+    )
+
+
+def schedule_pass(s: ScenarioState, *, bf_passes: int = BF_PASSES,
+                  freed_mode: str = "ref") -> ScenarioState:
+    """One FCFS + EASY-backfill pass at the current sim time ``s.t``."""
+    now = s.t
+    n = s.status.shape[0]
+
+    # 1. maximal FCFS prefix that fits ------------------------------------
+    elig = eligible_mask(s)
+    order, rank = fcfs_order(s, elig)
+    sorted_elig = elig[order]
+    sorted_cores = jnp.where(sorted_elig, s.cores[order], 0.0)
+    csum = jnp.cumsum(sorted_cores)
+    fits = sorted_elig & (csum <= s.free)
+    # cores > 0 ⇒ csum monotone ⇒ `fits` is automatically a prefix
+    start_mask = jnp.zeros(n, bool).at[order].set(fits)
+    s = _start_rows(s, start_mask, now)
+
+    # 2. reservation for the head (first eligible job that did not fit) ---
+    elig = eligible_mask(s)
+    n_elig = jnp.sum(elig)
+    head = jnp.argmin(jnp.where(elig, rank, n))   # FCFS-first leftover
+    has_head = n_elig > 0
+    running = s.status == RUNNING
+    freed = freed_vector(s.end, s.cores, running, mode=freed_mode)
+    shadow, extra = reservation(
+        s.end, s.cores, running, s.free,
+        jnp.where(has_head, s.cores[head], 0.0), freed=freed)
+
+    # 3. bounded backfill loop -------------------------------------------
+    def body(_, carry):
+        s, extra = carry
+        elig = eligible_mask(s)
+        cand = (elig & (jnp.arange(n) != head) & (s.cores <= s.free)
+                & ((now + s.duration <= shadow) | (s.cores <= extra)))
+        pick = jnp.argmin(jnp.where(cand, rank, n))
+        do = jnp.any(cand) & has_head
+        pick_mask = (jnp.arange(n) == pick) & do
+        # QueueSim decrements the reservation's spare only when the job
+        # rode in on it (fits_in_extra), even if it also drains in time
+        used_extra = jnp.where(do & (s.cores[pick] <= extra),
+                               s.cores[pick], 0.0)
+        return _start_rows(s, pick_mask, now), extra - used_extra
+
+    s, _ = jax.lax.fori_loop(0, bf_passes, body, (s, extra))
+    return s

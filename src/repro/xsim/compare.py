@@ -1,0 +1,107 @@
+"""Metrics extraction + QueueSim cross-validation bridge.
+
+``metrics`` reduces a finished ScenarioState to the same quantities
+``sched.runner``'s RunMetrics carries (twt_s, makespan_s, core_hours,
+oh_hours, utilization) so ``benchmarks/`` can consume either engine.
+``scenario_from_queue_sim`` snapshots a live event-driven QueueSim into an
+xsim job table — the cross-validation tests run both engines from the
+*identical* machine state and compare the numbers.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.xsim.state import (ASA, DONE, QUEUED, RUNNING, ScenarioState,
+                              empty_table)
+
+
+def metrics(s: ScenarioState) -> dict[str, jax.Array]:
+    """Per-scenario scalars (vmap over a batched state for fleet metrics).
+
+    twt_s is policy-aware: BigJob = the single job's wait, Per-Stage =
+    Σ stage waits, ASA = *perceived* waits (stage 0's wait plus the part
+    of each later stage's wait not hidden behind its predecessor) —
+    matching ``sched.strategies`` exactly.
+    """
+    n = s.status.shape[0]
+    wf = s.is_wf
+    wait = jnp.where(wf, s.start - s.submit, 0.0)
+    wait_sum = jnp.sum(jnp.where(wf, wait, 0.0))
+
+    # ASA perceived wait: first stage full wait, then relu(start_y − end_{y−1})
+    first = wf & (s.start_dep < 0)
+    succ = jnp.clip(s.wf_next, 0, n - 1)
+    has_succ = wf & (s.wf_next >= 0)
+    overlap_wait = jnp.sum(
+        jnp.where(has_succ, jnp.maximum(s.start[succ] - s.end, 0.0), 0.0))
+    asa_twt = jnp.sum(jnp.where(first, wait, 0.0)) + overlap_wait
+
+    twt = jnp.where(s.policy == ASA, asa_twt, wait_sum)
+
+    wf_end = jnp.max(jnp.where(wf, s.end, -jnp.inf))
+    makespan = wf_end - s.t0
+    core_seconds = jnp.sum(jnp.where(wf, s.cores * s.duration, 0.0))
+    done = jnp.sum((wf & (s.status == DONE)).astype(jnp.int32))
+    total_wf = jnp.sum(wf.astype(jnp.int32))
+    util = s.busy_cs / jnp.maximum(s.total * s.t, 1e-9)
+    return {
+        "twt_s": twt,
+        "makespan_s": makespan,
+        "core_hours": core_seconds / 3600.0,
+        "oh_hours": jnp.float32(0.0),  # xsim models dependency-ASA: OH = 0
+        "utilization": util,
+        "wf_done": done,
+        "wf_total": total_wf,
+        "policy": s.policy,
+    }
+
+
+batched_metrics = jax.jit(jax.vmap(metrics))
+
+
+def wf_rows(s: ScenarioState) -> dict[str, np.ndarray]:
+    """Host-side view of the workflow rows (stage-ordered), for tests."""
+    mask = np.asarray(s.is_wf)
+    out = {}
+    for name in ("submit", "start", "end", "cores", "duration", "status"):
+        out[name] = np.asarray(getattr(s, name))[mask]
+    return out
+
+
+def scenario_from_queue_sim(sim, max_jobs: int) -> tuple[dict, int]:
+    """Snapshot a live QueueSim into a host-side xsim job table.
+
+    Returns (table, next_free_row). Running jobs keep their residual end
+    times; queued jobs keep their submit times and FCFS positions (row
+    order = queue order, and xsim's stable sort preserves it for equal
+    submit times). Workflow rows are appended by the caller via
+    ``policies.add_workflow`` starting at next_free_row.
+    """
+    table = empty_table(max_jobs)
+    row = 0
+    for _, jid in sorted(sim.running):
+        j = sim.jobs[jid]
+        if jid in sim.finished or j.canceled:
+            continue
+        table["submit"][row] = j.submit_time
+        table["cores"][row] = j.cores
+        table["duration"][row] = j.duration
+        table["start"][row] = j.start_time
+        table["end"][row] = j.end_time
+        table["status"][row] = RUNNING
+        row += 1
+    for jid in sim.queue:
+        j = sim.jobs[jid]
+        table["submit"][row] = j.submit_time
+        table["cores"][row] = j.cores
+        table["duration"][row] = j.duration
+        table["status"][row] = QUEUED
+        row += 1
+    return table, row
+
+
+def queue_sim_free_cores(sim) -> float:
+    return float(sim.free_cores)

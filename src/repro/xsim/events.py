@@ -1,0 +1,126 @@
+"""Event-time advance + arrival/completion kernels + the `lax.scan` step.
+
+One ``sim_step`` jumps to the next event time (earliest pending submission
+or running-job completion), then applies, as masked array writes:
+
+  completions → per-stage release hook → admissions → ASA chain hook →
+  FCFS/backfill scheduling pass.
+
+Same-time cascades (e.g. a per-stage successor released *at* the
+completion instant) simply consume the next scan step at an unchanged
+``now`` — steps are cheap, so the step budget absorbs them. A scenario
+with no remaining events makes every further step a no-op, which lets a
+whole vmapped batch run the same static step count.
+
+Policy hooks (kept here, not in policies.py, because they are part of the
+per-event dataflow):
+
+* PER_STAGE: when stage y completes, stage y+1's submit time becomes
+  "now" — the sequential submit-on-completion loop of
+  ``strategies.run_per_stage``.
+* ASA: when stage y is *admitted* (pro-actively submitted) at time s_y,
+  its expected end  E_y = max(s_y + a_y, E_{y-1}) + t_y  chains forward
+  and stage y+1 is scheduled for  max(now, E_y − a_{y+1})  — exactly the
+  cascade of ``strategies.run_asa`` (§3.2, Fig. 4), with the sampled wait
+  estimates a_y frozen at scenario build time (see policies.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.xsim import backfill
+from repro.xsim.state import (ASA, DONE, PENDING, PER_STAGE, QUEUED, RUNNING,
+                              ScenarioState)
+
+
+def next_event_time(s: ScenarioState) -> jax.Array:
+    """Earliest pending submit or running end; +inf when nothing remains."""
+    submits = jnp.where(s.status == PENDING, s.submit, jnp.inf)
+    ends = jnp.where(s.status == RUNNING, s.end, jnp.inf)
+    return jnp.minimum(jnp.min(submits), jnp.min(ends))
+
+
+def complete_jobs(s: ScenarioState, now) -> tuple[ScenarioState, jax.Array]:
+    done = (s.status == RUNNING) & (s.end <= now)
+    freed = jnp.sum(jnp.where(done, s.cores, 0.0))
+    s = s._replace(status=jnp.where(done, DONE, s.status), free=s.free + freed)
+    return s, done
+
+
+def admit_jobs(s: ScenarioState, now) -> tuple[ScenarioState, jax.Array]:
+    adm = (s.status == PENDING) & (s.submit <= now)
+    s = s._replace(status=jnp.where(adm, QUEUED, s.status))
+    return s, adm
+
+
+def _release_per_stage(s: ScenarioState, newly_done, now) -> ScenarioState:
+    """Stage y DONE ⇒ stage y+1 submitted now (submit-on-completion)."""
+    n = s.status.shape[0]
+    fire = newly_done & s.is_wf & (s.policy == PER_STAGE) & (s.wf_next >= 0)
+    succ = jnp.where(fire, s.wf_next, n)  # n = drop
+    submit = s.submit.at[succ].set(now, mode="drop")
+    return s._replace(submit=submit)
+
+
+def _asa_chain(s: ScenarioState, newly_admitted, now) -> ScenarioState:
+    """Stage y admitted ⇒ fix E_y and schedule stage y+1 pro-actively."""
+    n = s.status.shape[0]
+    fire = newly_admitted & s.is_wf & (s.policy == ASA)
+    dep = jnp.clip(s.start_dep, 0, n - 1)
+    prev_ee = jnp.where(s.start_dep < 0, -jnp.inf, s.expected_end[dep])
+    ee = jnp.maximum(s.submit + s.pred_wait, prev_ee) + s.duration
+    expected_end = jnp.where(fire, ee, s.expected_end)
+    succ_ok = fire & (s.wf_next >= 0)
+    succ = jnp.where(succ_ok, s.wf_next, n)
+    succ_submit = jnp.maximum(now, ee - s.pred_wait[jnp.clip(s.wf_next, 0, n - 1)])
+    submit = s.submit.at[succ].set(
+        jnp.where(succ_ok, succ_submit, 0.0), mode="drop")
+    return s._replace(expected_end=expected_end, submit=submit)
+
+
+def sim_step(s: ScenarioState, *, bf_passes: int = backfill.BF_PASSES,
+             freed_mode: str = "ref") -> ScenarioState:
+    nxt = next_event_time(s)
+    now = jnp.where(jnp.isfinite(nxt), jnp.maximum(nxt, s.t), s.t)
+    # utilization integral over (t, now] at the pre-event allocation
+    busy_cs = s.busy_cs + (s.total - s.free) * (now - s.t)
+    s = s._replace(t=now, busy_cs=busy_cs)
+    s, newly_done = complete_jobs(s, now)
+    s = _release_per_stage(s, newly_done, now)
+    s, newly_admitted = admit_jobs(s, now)
+    s = _asa_chain(s, newly_admitted, now)
+    return backfill.schedule_pass(s, bf_passes=bf_passes,
+                                  freed_mode=freed_mode)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_steps", "bf_passes", "freed_mode"))
+def simulate(s: ScenarioState, *, n_steps: int,
+             bf_passes: int = backfill.BF_PASSES,
+             freed_mode: str = "ref") -> ScenarioState:
+    """Run ``n_steps`` event steps (idempotent once events are drained)."""
+    def body(s, _):
+        return sim_step(s, bf_passes=bf_passes, freed_mode=freed_mode), None
+
+    s, _ = jax.lax.scan(body, s, None, length=n_steps)
+    return s
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_steps", "bf_passes", "freed_mode"))
+def sweep(batched: ScenarioState, *, n_steps: int,
+          bf_passes: int = backfill.BF_PASSES,
+          freed_mode: str = "ref") -> ScenarioState:
+    """The fleet program: vmap(simulate) over a batched ScenarioState.
+
+    ``freed_mode="tpu"`` routes the reservation scan through the Pallas
+    kernel (vmap batches it into one (B, N) grid program).
+    """
+    return jax.vmap(
+        lambda s: simulate(s, n_steps=n_steps, bf_passes=bf_passes,
+                           freed_mode=freed_mode)
+    )(batched)

@@ -1,0 +1,326 @@
+"""Scenario-grid construction + fleet sweep runner.
+
+A *grid cell* is (center × scale × workflow × policy); a *scenario* is a
+cell plus a PRNG seed drawing its background workload. All cell
+parameters are data (stacked arrays), so ``jax.vmap(build_scenario)``
+materializes thousands of scenarios in one traced program and
+``events.sweep`` runs them as one batched ``lax.scan`` — the fleet-scale
+substrate the ROADMAP's "as many scenarios as you can imagine" asks for.
+
+The background generator mirrors ``QueueSim``'s calibrated model
+(Poisson bursts, log-normal widths/durations, warm-start residuals +
+backlog) with two slotted-state approximations, documented in README.md:
+burst sizes are drawn per arrival *group* up front, and the warm-start
+fill stops at the capacity target instead of clipping the last job.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sched.centers import CENTERS, CenterProfile
+from repro.sched.workflows import WORKFLOWS
+from repro.xsim import backfill, events, policies
+from repro.xsim.state import (INVALID, PENDING, POLICY_NAMES, QUEUED,
+                              RUNNING, ScenarioState)
+
+
+class XCenter(NamedTuple):
+    """Center parameters as data (vmap-able across scenarios)."""
+
+    total_cores: jax.Array
+    bg_arrival_rate: jax.Array
+    bg_cores_mean: jax.Array
+    bg_cores_sigma: jax.Array
+    bg_duration_mean_s: jax.Array
+    bg_duration_sigma: jax.Array
+    bg_backlog: jax.Array
+    bg_burst_mean: jax.Array
+
+
+def center_params(p: CenterProfile, shrink: float = 1.0) -> XCenter:
+    """A (possibly miniaturized) center. ``shrink`` scales the machine,
+    the backlog and the arrival rate together, preserving offered load —
+    small grids simulate fast while keeping the congestion regime."""
+    return XCenter(
+        total_cores=jnp.float32(max(p.total_cores * shrink, 8.0)),
+        bg_arrival_rate=jnp.float32(p.bg_arrival_rate * shrink),
+        bg_cores_mean=jnp.float32(p.bg_cores_mean),
+        bg_cores_sigma=jnp.float32(p.bg_cores_sigma),
+        bg_duration_mean_s=jnp.float32(p.bg_duration_mean_s),
+        bg_duration_sigma=jnp.float32(p.bg_duration_sigma),
+        bg_backlog=jnp.float32(max(round(p.bg_initial_backlog * shrink), 1)),
+        bg_burst_mean=jnp.float32(p.bg_burst_mean),
+    )
+
+
+@dataclass(frozen=True)
+class XSimConfig:
+    """Static shape/budget parameters shared by a whole grid."""
+
+    n_warm: int = 48         # warm-start running-job slots
+    n_backlog: int = 32      # queued-backlog slots
+    n_arrivals: int = 64     # future background-arrival slots
+    max_stages: int = 9      # Montage has 9
+    t0: float = 7200.0       # workflow submission epoch (runner.WARMUP_S)
+    horizon: float = 10 * 86400.0  # arrivals beyond this are dropped
+    warm_fill: float = 0.97  # warm-start capacity target (QueueSim's 97%)
+
+    @property
+    def max_jobs(self) -> int:
+        return self.n_warm + self.n_backlog + self.n_arrivals + self.max_stages
+
+    @property
+    def n_steps(self) -> int:
+        """Safe event budget: admissions batch, ends are distinct, each
+        workflow stage adds a short same-time cascade."""
+        return 2 * self.max_jobs + 6 * self.max_stages + 16
+
+
+def build_scenario(key: jax.Array, center: XCenter, wf_cores: jax.Array,
+                   wf_durs: jax.Array, wf_valid: jax.Array,
+                   preds: jax.Array, policy: jax.Array,
+                   cfg: XSimConfig) -> ScenarioState:
+    """One scenario as a pure function of (key, cell data). vmap freely."""
+    k_warm_c, k_warm_d, k_warm_u, k_back_c, k_back_d, k_arr_g, k_arr_b, \
+        k_arr_c, k_arr_d = jax.random.split(key, 9)
+    total = center.total_cores
+
+    def widths(k, n):
+        w = jnp.exp(center.bg_cores_mean
+                    + center.bg_cores_sigma * jax.random.normal(k, (n,)))
+        return jnp.clip(jnp.round(w), 1.0, jnp.maximum(total // 2, 1.0))
+
+    def durations(k, n):
+        d = jnp.exp(center.bg_duration_mean_s
+                    + center.bg_duration_sigma * jax.random.normal(k, (n,)))
+        return jnp.clip(d, 30.0, 7.0 * 86400.0)
+
+    # --- warm start: machine filled to ~warm_fill with residual jobs ----
+    wc = widths(k_warm_c, cfg.n_warm)
+    wd = durations(k_warm_d, cfg.n_warm)
+    w_ok = jnp.cumsum(wc) <= cfg.warm_fill * total
+    wc = jnp.where(w_ok, wc, 0.0)
+    w_end = jax.random.uniform(k_warm_u, (cfg.n_warm,), minval=0.05,
+                               maxval=1.0) * wd
+    free = total - jnp.sum(wc)
+
+    # --- backlog: queued at t=0, FCFS position = row order --------------
+    bc = widths(k_back_c, cfg.n_backlog)
+    bd = durations(k_back_d, cfg.n_backlog)
+    b_ok = jnp.arange(cfg.n_backlog) < center.bg_backlog
+
+    # --- future arrivals: Poisson bursts --------------------------------
+    gaps = jax.random.exponential(k_arr_g, (cfg.n_arrivals,)) \
+        / center.bg_arrival_rate
+    group_t = jnp.cumsum(gaps)
+    u = jax.random.uniform(k_arr_b, (cfg.n_arrivals,), minval=1e-6,
+                           maxval=1.0 - 1e-6)
+    p_burst = 1.0 / jnp.maximum(center.bg_burst_mean, 1.0)
+    burst = jnp.where(
+        center.bg_burst_mean <= 1.0, 1.0,
+        jnp.floor(jnp.log(u) / jnp.log1p(-p_burst)) + 1.0)
+    group_of = jnp.searchsorted(jnp.cumsum(burst),
+                                jnp.arange(cfg.n_arrivals), side="right")
+    a_submit = group_t[jnp.clip(group_of, 0, cfg.n_arrivals - 1)]
+    ac = widths(k_arr_c, cfg.n_arrivals)
+    ad = durations(k_arr_d, cfg.n_arrivals)
+    a_ok = a_submit <= cfg.horizon
+
+    # --- workflow rows (policy is data: all three variants, selected) ---
+    wf_off = cfg.n_warm + cfg.n_backlog + cfg.n_arrivals
+    y = jnp.arange(cfg.max_stages)
+    peak = jnp.max(wf_cores)
+    total_dur = jnp.sum(jnp.where(wf_valid, wf_durs, 0.0))
+    is_big = policy == 0
+    f_valid = jnp.where(is_big, y == 0, wf_valid)
+    f_cores = jnp.where(is_big, jnp.where(y == 0, peak, 0.0), wf_cores)
+    f_durs = jnp.where(is_big, jnp.where(y == 0, total_dur, 0.0), wf_durs)
+    f_submit = jnp.where(y == 0, cfg.t0, jnp.inf)
+    nxt_valid = jnp.concatenate([f_valid[1:], jnp.zeros(1, bool)])
+    f_next = jnp.where(f_valid & nxt_valid & ~is_big, wf_off + y + 1, -1)
+    f_dep = jnp.where(f_valid & (y > 0) & ~is_big, wf_off + y - 1, -1)
+
+    # --- assemble the table ---------------------------------------------
+    def cat(warm, back, arr, wf):
+        return jnp.concatenate([warm, back, arr, wf])
+
+    zeros = jnp.zeros
+    nwm, nbk, nar, nst = cfg.n_warm, cfg.n_backlog, cfg.n_arrivals, \
+        cfg.max_stages
+    inf = jnp.inf
+    submit = cat(zeros(nwm), zeros(nbk), jnp.where(a_ok, a_submit, inf),
+                 f_submit)
+    cores = cat(wc, jnp.where(b_ok, bc, 0.0), jnp.where(a_ok, ac, 0.0),
+                f_cores)
+    duration = cat(wd, bd, ad, f_durs)
+    start = cat(jnp.where(w_ok, 0.0, inf), jnp.full(nbk, inf),
+                jnp.full(nar, inf), jnp.full(nst, inf))
+    end = cat(jnp.where(w_ok, w_end, inf), jnp.full(nbk, inf),
+              jnp.full(nar, inf), jnp.full(nst, inf))
+    status = cat(jnp.where(w_ok, RUNNING, INVALID),
+                 jnp.where(b_ok, QUEUED, INVALID),
+                 jnp.where(a_ok, PENDING, INVALID),
+                 jnp.where(f_valid, PENDING, INVALID)).astype(jnp.int32)
+    start_dep = cat(jnp.full(nwm, -1), jnp.full(nbk, -1), jnp.full(nar, -1),
+                    f_dep).astype(jnp.int32)
+    wf_next = cat(jnp.full(nwm, -1), jnp.full(nbk, -1), jnp.full(nar, -1),
+                  f_next).astype(jnp.int32)
+    is_wf = cat(zeros(nwm, bool), zeros(nbk, bool), zeros(nar, bool),
+                f_valid)
+    pred_wait = cat(zeros(nwm), zeros(nbk), zeros(nar), preds)
+
+    return ScenarioState(
+        submit=submit, cores=cores, duration=duration, start=start, end=end,
+        status=status, start_dep=start_dep, wf_next=wf_next, is_wf=is_wf,
+        pred_wait=pred_wait,
+        expected_end=jnp.full(cfg.max_jobs, -jnp.inf),
+        t=jnp.float32(0.0), free=free, total=total,
+        policy=policy.astype(jnp.int32), t0=jnp.float32(cfg.t0),
+        busy_cs=jnp.float32(0.0), min_free=free,
+    )
+
+
+build_batch = jax.jit(
+    jax.vmap(build_scenario, in_axes=(0, 0, 0, 0, 0, 0, 0, None)),
+    static_argnums=(7,))
+
+
+@dataclass
+class ScenarioGrid:
+    """A flat batch of scenarios + the cell labels that produced them."""
+
+    cfg: XSimConfig
+    keys: jax.Array               # (B, 2) PRNG keys
+    centers: XCenter              # stacked (B,)
+    wf_cores: jax.Array           # (B, S)
+    wf_durs: jax.Array            # (B, S)
+    wf_valid: jax.Array           # (B, S)
+    policies: jax.Array           # (B,)
+    geo_idx: np.ndarray           # (B,) geometry id (center, scale) per row
+    labels: list[dict]            # per-scenario {center, scale, workflow, ...}
+
+    @property
+    def n(self) -> int:
+        return int(self.policies.shape[0])
+
+    def build(self, preds: jax.Array) -> ScenarioState:
+        return build_batch(self.keys, self.centers, self.wf_cores,
+                           self.wf_durs, self.wf_valid, preds,
+                           self.policies, self.cfg)
+
+
+def make_grid(cfg: XSimConfig,
+              center_names: Sequence[str] = ("hpc2n", "uppmax"),
+              workflows: Sequence[str] = ("montage", "blast", "statistics"),
+              policy_ids: Sequence[int] = (0, 1, 2),
+              n_seeds: int = 4, shrink: float = 1.0 / 64.0,
+              scales: Sequence[int] | None = None,
+              seed: int = 0) -> ScenarioGrid:
+    """The full scenario product, flattened to one batch.
+
+    Cells = centers × their paper scales × workflows × policies × seeds.
+    ``shrink`` miniaturizes the centers (default 1/64: HPC2n → 263 cores)
+    so the slotted tables stay small; workflow scales shrink alongside.
+    """
+    cells, labels, geo, bg_keys = [], [], [], []
+    base = jax.random.PRNGKey(seed)
+    geo_ids: dict[tuple[str, int], int] = {}
+    for cname in center_names:
+        profile = CENTERS[cname]
+        for scale in (scales or profile.scales):
+            eff_scale = max(int(round(scale * shrink)), 2)
+            gid = geo_ids.setdefault((cname, scale), len(geo_ids))
+            for wname in workflows:
+                sc, sd, sv = policies.stage_arrays(
+                    WORKFLOWS[wname], eff_scale, cfg.max_stages)
+                for pol in policy_ids:
+                    for s in range(n_seeds):
+                        cells.append((profile, sc, sd, sv, pol))
+                        geo.append(gid)
+                        # background depends ONLY on (geometry, seed):
+                        # strategies and workflows of one cell see the
+                        # identical machine, as run_table1 does
+                        bg_keys.append(jax.random.fold_in(
+                            base, gid * 100_003 + s))
+                        labels.append(dict(center=cname, scale=scale,
+                                           workflow=wname,
+                                           strategy=POLICY_NAMES[pol],
+                                           seed=s))
+    B = len(cells)
+    stacked_centers = jax.tree.map(
+        lambda *xs: jnp.stack(xs),
+        *[center_params(c[0], shrink) for c in cells])
+    return ScenarioGrid(
+        cfg=cfg,
+        keys=jnp.stack(bg_keys),
+        centers=stacked_centers,
+        wf_cores=jnp.stack([jnp.asarray(c[1]) for c in cells]),
+        wf_durs=jnp.stack([jnp.asarray(c[2]) for c in cells]),
+        wf_valid=jnp.stack([jnp.asarray(c[3]) for c in cells]),
+        policies=jnp.asarray([c[4] for c in cells], jnp.int32),
+        geo_idx=np.asarray(geo),
+        labels=labels,
+    )
+
+
+def run_grid(grid: ScenarioGrid, fleet=None, *, pred_seed: int = 1,
+             bf_passes: int = backfill.BF_PASSES,
+             freed_mode: str = "ref"):
+    """Build + sweep the whole grid in one jitted batched program.
+
+    ``fleet`` is a batched ASAState (one estimator per geometry); when
+    None a fresh fleet is initialised (cold predictions). ``freed_mode``
+    selects the reservation-scan backend (``"tpu"`` = Pallas kernel).
+    Returns (final_states, metrics dict of (B,) arrays).
+    """
+    from repro.xsim import compare
+
+    if fleet is None:
+        fleet = policies.init_fleet(int(grid.geo_idx.max()) + 1)
+    preds = policies.sample_predictions(
+        fleet, jnp.asarray(grid.geo_idx), jax.random.PRNGKey(pred_seed),
+        grid.cfg.max_stages)
+    states = grid.build(preds)
+    final = events.sweep(states, n_steps=grid.cfg.n_steps,
+                         bf_passes=bf_passes, freed_mode=freed_mode)
+    return final, compare.batched_metrics(final)
+
+
+def stage_waits(final: ScenarioState, cfg: XSimConfig
+                ) -> tuple[np.ndarray, np.ndarray]:
+    """(waits, valid) of shape (B, max_stages) from a batched final state."""
+    sl = slice(cfg.max_jobs - cfg.max_stages, cfg.max_jobs)
+    waits = np.asarray(final.start[:, sl] - final.submit[:, sl])
+    valid = np.asarray(final.is_wf[:, sl]) & np.isfinite(waits)
+    return waits, valid
+
+
+def warm_fleet(fleet, grid: ScenarioGrid, rounds: int = 2, k: int = 8,
+               seed: int = 100):
+    """§4.3 cross-run persistence: sweep, observe first-stage waits (a
+    clean per-geometry queue sample), update every geometry's estimator,
+    repeat. Returns the warmed fleet."""
+    n_geo = fleet.log_p.shape[0]
+    # BigJob's row 0 is the peak-cores monolith, not a stage-shaped job —
+    # exclude it so each geometry learns from clean stage-0 samples
+    stagelike = np.array([lab["strategy"] != "bigjob"
+                          for lab in grid.labels])
+    for r in range(rounds):
+        final, _ = run_grid(grid, fleet, pred_seed=seed + r)
+        waits, valid = stage_waits(final, grid.cfg)
+        W = np.zeros((n_geo, k), np.float32)
+        V = np.zeros((n_geo, k), bool)
+        for g in range(n_geo):
+            sel = (grid.geo_idx == g) & stagelike
+            w = waits[sel, 0]
+            w = w[valid[sel, 0]][:k]
+            W[g, :len(w)] = w
+            V[g, :len(w)] = True
+        fleet = policies.update_fleet(fleet, jnp.asarray(W), jnp.asarray(V))
+    return fleet

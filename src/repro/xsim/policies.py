@@ -1,0 +1,141 @@
+"""Strategy drivers for xsim: BigJob / Per-Stage / ASA job-table rows, and
+the ASA estimator-fleet wiring (`repro.core.asa.init_batch`/`batched_step`).
+
+A strategy is *data* in xsim: the same event engine runs all three, they
+differ only in the workflow rows written into the job table (and the
+per-policy hooks in events.py). ``add_workflow`` builds those rows
+host-side for a single scenario (cross-validation, tests); grid.py builds
+the same rows as traced jnp for vmapped scenario construction.
+
+ASA's sampled wait estimates a_y are drawn from the fleet *before* the
+sweep (frozen per scenario) — the event-driven ``strategies.run_asa``
+re-samples from a state that also learns mid-run; freezing is the price
+of keeping the sweep a single batched program, and is a good
+approximation because within-run learning moves p by at most s ≪ warm-up
+observations. Learning happens between sweeps via ``update_fleet``
+(paper §4.3: Algorithm-1 state persists across runs).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import asa
+from repro.core.bins import make_bins
+from repro.core.losses import zero_one
+from repro.sched.workflows import Workflow
+from repro.xsim.state import ASA, BIGJOB, PENDING, add_job
+
+# ------------------------------------------------------------ stage tables
+
+
+def stage_arrays(wf: Workflow, scale: int, max_stages: int
+                 ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """(cores, durations, valid) padded to ``max_stages`` — grid cell data."""
+    s = len(wf.stages)
+    if s > max_stages:
+        raise ValueError(f"{wf.name} has {s} stages > max_stages={max_stages}")
+    cores = np.zeros(max_stages, np.float32)
+    durs = np.zeros(max_stages, np.float32)
+    valid = np.zeros(max_stages, bool)
+    for y, st in enumerate(wf.stages):
+        cores[y] = st.cores(scale)
+        durs[y] = st.duration(scale)
+        valid[y] = True
+    return cores, durs, valid
+
+
+def add_workflow(table: dict[str, np.ndarray], offset: int, wf: Workflow,
+                 scale: int, policy: int, t0: float,
+                 preds: np.ndarray | None = None) -> int:
+    """Write one workflow's stage rows into a host-side table.
+
+    Returns the number of rows used. ``preds`` are the ASA wait estimates
+    a_y (seconds), required when ``policy == ASA``.
+    """
+    if policy == BIGJOB:
+        add_job(table, offset, cores=wf.peak_cores(scale),
+                duration=wf.total_exec(scale), submit=t0, status=PENDING,
+                is_wf=True)
+        return 1
+    s = len(wf.stages)
+    if policy == ASA and (preds is None or len(preds) < s):
+        raise ValueError("ASA policy needs one wait estimate per stage")
+    for y, st in enumerate(wf.stages):
+        add_job(
+            table, offset + y,
+            cores=st.cores(scale), duration=st.duration(scale),
+            submit=t0 if y == 0 else np.inf, status=PENDING,
+            start_dep=offset + y - 1 if y > 0 else -1,
+            wf_next=offset + y + 1 if y + 1 < s else -1,
+            is_wf=True,
+            pred_wait=float(preds[y]) if policy == ASA else 0.0,
+        )
+    return s
+
+
+# ------------------------------------------------------------- ASA fleet
+
+
+def init_fleet(n: int, m: int = 53, seed: int = 0) -> asa.ASAState:
+    """One Algorithm-1 estimator per job geometry, as a batched state."""
+    return asa.init_batch(m, n, jax.random.PRNGKey(seed))
+
+
+def sample_predictions(fleet: asa.ASAState, geo_idx: jax.Array,
+                       key: jax.Array, n_preds: int,
+                       bins: jax.Array | None = None,
+                       mode: str = "greedy") -> jax.Array:
+    """(n_scenarios, n_preds) wait estimates for the frozen ASA cascade.
+
+    ``greedy`` (default) gives every stage its geometry's MAP wait. The
+    event-driven runner re-samples from a state that re-sharpens at every
+    stage start; with predictions frozen before the sweep, *consistency*
+    across a scenario's stages is what keeps the §3.2 cascade stable —
+    uniformly wrong-but-equal estimates degrade gracefully in both
+    directions (under-prediction is absorbed by the afterok dependency,
+    over-prediction cancels out of E_y − a_{y+1}), whereas i.i.d. draws
+    from a multi-modal p can delay a successor by the full bin gap.
+    ``sample`` draws Algorithm-1 line-4 actions i.i.d. instead.
+    """
+    if bins is None:
+        bins = jnp.asarray(make_bins(fleet.log_p.shape[-1]), jnp.float32)
+    log_p = fleet.log_p[geo_idx]                     # (n_scenarios, m)
+    if mode == "greedy":
+        acts = jnp.broadcast_to(jnp.argmax(log_p, axis=-1)[:, None],
+                                (log_p.shape[0], n_preds))
+    elif mode == "sample":
+        keys = jax.random.split(key, log_p.shape[0])
+        acts = jax.vmap(
+            lambda k, lp: jax.random.categorical(k, lp, shape=(n_preds,))
+        )(keys, log_p)
+    else:
+        raise ValueError(f"unknown prediction mode {mode!r}")
+    return bins[acts]
+
+
+def update_fleet(fleet: asa.ASAState, waits: jax.Array,
+                 valid: jax.Array, gamma: float = 1.0,
+                 bins: jax.Array | None = None) -> asa.ASAState:
+    """Observe true waits: ``waits``/(``valid``) are (n_geometries, k);
+    each geometry's estimator takes its k observations in sequence via
+    ``asa.batched_step`` (the tuned §4.5 policy, as sched.strategies)."""
+    m = fleet.log_p.shape[-1]
+    if bins is None:
+        bins = jnp.asarray(make_bins(m), jnp.float32)
+    g = jnp.float32(gamma)
+    for j in range(waits.shape[1]):
+        w = jnp.maximum(waits[:, j], 1.0)
+        lv = jax.vmap(lambda wi: zero_one(bins, wi))(w)
+        stepped, _ = jax.vmap(
+            lambda s, l: asa.step(s, l, g, policy="tuned"),
+            in_axes=(0, 0), out_axes=(0, 0))(fleet, lv)
+        keep = valid[:, j]
+        fleet = jax.tree.map(
+            lambda new, old: jnp.where(
+                jnp.reshape(keep, (-1,) + (1,) * (new.ndim - 1)), new, old),
+            stepped, fleet)
+    return fleet

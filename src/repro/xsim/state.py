@@ -1,0 +1,119 @@
+"""Slotted scenario state for the vectorized batch-queue simulator.
+
+One scenario is a fixed-size *job table*: every job the scenario will ever
+see — warm-start running jobs, queued backlog, future background arrivals
+and the workflow's stage jobs — occupies one row from t=0. Rows move
+through a status ladder (INVALID → PENDING → QUEUED → RUNNING → DONE) via
+masked array writes, so the whole simulation is a pure JAX program:
+``lax.scan`` advances event time, ``jax.vmap`` runs thousands of
+independent scenarios as one batched program (see events.py / grid.py).
+
+This trades the event-driven simulator's unbounded heap for a static
+``(max_jobs,)`` shape — the price of jit: scenarios must declare an upper
+bound on how many jobs they contain. See README.md for the full list of
+approximations vs. ``repro.sched.queue_sim.QueueSim``.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# --- job status ladder -----------------------------------------------------
+INVALID = 0   # empty slot (padding)
+PENDING = 1   # exists but not yet submitted (submit time possibly unknown)
+QUEUED = 2    # submitted, waiting in the FCFS queue
+RUNNING = 3
+DONE = 4
+
+# --- scenario policy ids (mirrors sched.strategies) ------------------------
+BIGJOB = 0
+PER_STAGE = 1
+ASA = 2
+
+POLICY_NAMES = ("bigjob", "per_stage", "asa")
+
+INF = jnp.inf
+
+
+class ScenarioState(NamedTuple):
+    """One scenario's full simulation state (a pytree of arrays).
+
+    Job-table fields are ``(max_jobs,)``; the rest are scalars. ``vmap``
+    over the leading axis gives a fleet of scenarios.
+    """
+
+    # job table ------------------------------------------------------------
+    submit: jax.Array       # f32 (max_jobs,) submission time; +inf = unreleased
+    cores: jax.Array        # f32 (max_jobs,)
+    duration: jax.Array     # f32 (max_jobs,)
+    start: jax.Array        # f32 (max_jobs,) +inf until started
+    end: jax.Array          # f32 (max_jobs,) +inf until start (then start+dur)
+    status: jax.Array       # i32 (max_jobs,)
+    start_dep: jax.Array    # i32 (max_jobs,) row idx of afterok dep, -1 none
+    wf_next: jax.Array      # i32 (max_jobs,) successor stage row, -1 none
+    is_wf: jax.Array        # bool (max_jobs,) workflow (not background) job
+    pred_wait: jax.Array    # f32 (max_jobs,) ASA's sampled wait estimate a_y
+    expected_end: jax.Array  # f32 (max_jobs,) ASA chain E[end_y]; -inf unset
+    # scalars ---------------------------------------------------------------
+    t: jax.Array            # f32 () current simulation time
+    free: jax.Array         # f32 () free cores
+    total: jax.Array        # f32 () machine size
+    policy: jax.Array       # i32 () BIGJOB / PER_STAGE / ASA
+    t0: jax.Array           # f32 () workflow submission epoch
+    busy_cs: jax.Array      # f32 () ∫ used_cores dt  (utilization integral)
+    min_free: jax.Array     # f32 () min free cores ever seen (invariant probe)
+
+
+def empty_table(max_jobs: int) -> dict[str, np.ndarray]:
+    """A host-side (numpy) job table of INVALID rows, ready to fill."""
+    return {
+        "submit": np.full(max_jobs, np.inf, np.float32),
+        "cores": np.zeros(max_jobs, np.float32),
+        "duration": np.zeros(max_jobs, np.float32),
+        "start": np.full(max_jobs, np.inf, np.float32),
+        "end": np.full(max_jobs, np.inf, np.float32),
+        "status": np.full(max_jobs, INVALID, np.int32),
+        "start_dep": np.full(max_jobs, -1, np.int32),
+        "wf_next": np.full(max_jobs, -1, np.int32),
+        "is_wf": np.zeros(max_jobs, bool),
+        "pred_wait": np.zeros(max_jobs, np.float32),
+        "expected_end": np.full(max_jobs, -np.inf, np.float32),
+    }
+
+
+def freeze(table: dict[str, np.ndarray], *, total_cores: float,
+           free_cores: float, now: float = 0.0, policy: int = BIGJOB,
+           t0: float = 0.0) -> ScenarioState:
+    """Build a device ScenarioState from a host-side table + scalars."""
+    return ScenarioState(
+        **{k: jnp.asarray(v) for k, v in table.items()},
+        t=jnp.float32(now),
+        free=jnp.float32(free_cores),
+        total=jnp.float32(total_cores),
+        policy=jnp.int32(policy),
+        t0=jnp.float32(t0),
+        busy_cs=jnp.float32(0.0),
+        min_free=jnp.float32(free_cores),
+    )
+
+
+def add_job(table: dict[str, np.ndarray], row: int, *, cores: float,
+            duration: float, submit: float = np.inf, status: int = PENDING,
+            start: float = np.inf, end: float = np.inf, start_dep: int = -1,
+            wf_next: int = -1, is_wf: bool = False,
+            pred_wait: float = 0.0) -> None:
+    """Fill one host-side table row (scenario construction helper)."""
+    table["submit"][row] = submit
+    table["cores"][row] = cores
+    table["duration"][row] = duration
+    table["start"][row] = start
+    table["end"][row] = end
+    table["status"][row] = status
+    table["start_dep"][row] = start_dep
+    table["wf_next"][row] = wf_next
+    table["is_wf"][row] = is_wf
+    table["pred_wait"][row] = pred_wait

@@ -1,0 +1,79 @@
+"""Shared test fixtures + a minimal ``hypothesis`` fallback.
+
+Several test modules use hypothesis property tests. On minimal
+environments (the benchmark container) hypothesis is not installed, which
+used to abort collection of four tier-1 modules. If the real package is
+available we use it untouched; otherwise we install a tiny deterministic
+stand-in that replays each ``@given`` test over a fixed set of drawn
+examples (endpoints first, then seeded random draws). It covers exactly
+the API surface the test-suite uses: ``given``, ``settings``,
+``strategies.integers`` and ``strategies.floats``.
+"""
+
+from __future__ import annotations
+
+import sys
+import types
+
+try:  # pragma: no cover - exercised only when hypothesis exists
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    import numpy as np
+
+    class _Strategy:
+        def __init__(self, endpoints, sampler):
+            self.endpoints = endpoints  # deterministic boundary examples
+            self.sampler = sampler      # fn(rng) -> random example
+
+    def _integers(min_value, max_value):
+        return _Strategy(
+            (min_value, max_value),
+            lambda rng: int(rng.integers(min_value, max_value + 1)),
+        )
+
+    def _floats(min_value, max_value, **_kw):
+        return _Strategy(
+            (float(min_value), float(max_value)),
+            lambda rng: float(rng.uniform(min_value, max_value)),
+        )
+
+    def _settings(max_examples: int = 10, deadline=None, **_kw):
+        def deco(fn):
+            fn._stub_max_examples = max_examples
+            return fn
+        return deco
+
+    def _given(*strategies, **_kw):
+        def deco(fn):
+            # NOTE: no functools.wraps — the wrapper must present a
+            # zero-argument signature or pytest hunts for fixtures named
+            # after the strategy parameters.
+            def wrapper():
+                # read at call time so @settings works above OR below
+                # @given (real hypothesis accepts both orders)
+                n = getattr(wrapper, "_stub_max_examples",
+                            getattr(fn, "_stub_max_examples", 10))
+                rng = np.random.default_rng(0)
+                cases = [tuple(s.endpoints[0] for s in strategies),
+                         tuple(s.endpoints[1] for s in strategies)]
+                while len(cases) < n:
+                    cases.append(tuple(s.sampler(rng) for s in strategies))
+                for case in cases[:n]:
+                    fn(*case)
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            return wrapper
+        return deco
+
+    stub = types.ModuleType("hypothesis")
+    strategies = types.ModuleType("hypothesis.strategies")
+    strategies.integers = _integers
+    strategies.floats = _floats
+    stub.given = _given
+    stub.settings = _settings
+    stub.strategies = strategies
+    stub.__stub__ = True
+    sys.modules["hypothesis"] = stub
+    sys.modules["hypothesis.strategies"] = strategies
