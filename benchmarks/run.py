@@ -53,18 +53,28 @@ def dryrun_summary() -> None:
     print(f"dryrun/all_cells,0,ok={ok};fail={fail};skip={skip}")
 
 
-def xsim_main(n_seeds: int = 4) -> None:
-    """Strategy comparison on the batched engine + its throughput row."""
+def xsim_main(n_seeds: int = 4, include_naive: bool = False) -> None:
+    """Strategy comparison on the batched engine + its throughput row.
+
+    ``include_naive`` adds the §4.5 ASA-Naive (cancel/resubmit) policy to
+    the sweep; its row carries the over-allocation OH the dependency-free
+    variant pays for mispredictions.
+    """
     import time
 
     import numpy as np
 
     from repro.xsim import policies
     from repro.xsim.grid import XSimConfig, make_grid, run_grid, warm_fleet
+    from repro.xsim.state import ASA, ASA_NAIVE, BIGJOB, PER_STAGE
 
     cfg = XSimConfig(n_warm=24, n_backlog=16, n_arrivals=24, max_stages=9,
                      t0=3600.0)
-    grid = make_grid(cfg, n_seeds=n_seeds, shrink=1 / 64.0)
+    policy_ids = (BIGJOB, PER_STAGE, ASA)
+    if include_naive:
+        policy_ids += (ASA_NAIVE,)
+    grid = make_grid(cfg, n_seeds=n_seeds, shrink=1 / 64.0,
+                     policy_ids=policy_ids)
     fleet = policies.init_fleet(int(grid.geo_idx.max()) + 1)
     fleet = warm_fleet(fleet, grid, rounds=3)
     t0 = time.time()
@@ -81,10 +91,12 @@ def xsim_main(n_seeds: int = 4) -> None:
         tw = float(np.mean(m["twt_s"][idx]))
         mk = float(np.mean(m["makespan_s"][idx]))
         ch = float(np.mean(m["core_hours"][idx]))
+        oh = float(np.mean(m["oh_hours"][idx]))
         print(f"xsim_strategies/{strat},{elapsed * 1e6 / grid.n:.0f},"
               f"twt=+{(tw / max(base['twt_s'], 1e-9) - 1) * 100:.0f}%;"
               f"makespan=+{(mk / base['makespan_s'] - 1) * 100:.0f}%;"
-              f"ch=+{(ch / base['core_hours'] - 1) * 100:.0f}%")
+              f"ch=+{(ch / base['core_hours'] - 1) * 100:.0f}%;"
+              f"oh_hours={oh:.3f}")
     print(f"xsim_strategies/n,0,scenarios={grid.n};"
           f"scenarios_per_sec={grid.n / elapsed:.0f}")
 
@@ -124,8 +136,11 @@ def main() -> None:
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--engine", choices=("event", "xsim"), default="event")
+    ap.add_argument("--policy", choices=("asa-naive",), default=None,
+                    help="asa-naive: include the §4.5 cancel/resubmit "
+                         "variant in the xsim strategy sweep")
     args = ap.parse_args()
     if args.engine == "xsim":
-        xsim_main()
+        xsim_main(include_naive=args.policy == "asa-naive")
     else:
         main()

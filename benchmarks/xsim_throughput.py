@@ -13,7 +13,9 @@ CSV rows: ``name,us_per_call,derived`` (benchmarks/run.py convention).
 from __future__ import annotations
 
 import argparse
+import json
 import time
+from pathlib import Path
 
 import jax
 import numpy as np
@@ -23,7 +25,7 @@ from repro.xsim.grid import XSimConfig, make_grid, run_grid
 
 
 def bench(n_seeds: int, reps: int, label: str,
-          freed_mode: str = "ref") -> None:
+          freed_mode: str = "ref") -> dict:
     cfg = XSimConfig(n_warm=16, n_backlog=12, n_arrivals=16, max_stages=9,
                      t0=3600.0)
     grid = make_grid(cfg, n_seeds=n_seeds, shrink=1 / 64.0)
@@ -49,6 +51,20 @@ def bench(n_seeds: int, reps: int, label: str,
           f"n_steps={cfg.n_steps};max_jobs={cfg.max_jobs};"
           f"compile_s={compile_s:.1f};wf_done_frac={done:.3f};"
           f"backend={jax.default_backend()};freed_mode={freed_mode}")
+    return {
+        "label": label,
+        "scenarios_per_sec": sps,
+        "us_per_scenario": steady_s * 1e6 / grid.n,
+        "n_scenarios": grid.n,
+        "n_steps": cfg.n_steps,
+        "max_jobs": cfg.max_jobs,
+        "reps": reps,
+        "compile_s": compile_s,
+        "wf_done_frac": done,
+        "backend": jax.default_backend(),
+        "freed_mode": freed_mode,
+        "in_scan_learning": True,   # within-run ASA learning is always on
+    }
 
 
 def main() -> None:
@@ -60,18 +76,24 @@ def main() -> None:
                                              "tpu"), default="auto",
                     help="reservation-scan backend; auto = Pallas kernel "
                          "on TPU, jnp reference elsewhere")
+    ap.add_argument("--json", type=Path, default=None, metavar="PATH",
+                    help="also write the result record as JSON (the CI "
+                         "bench-trajectory artifact)")
     args = ap.parse_args()
     mode = args.freed_mode
     if mode == "auto":
         mode = "tpu" if jax.default_backend() == "tpu" else "ref"
     if args.smoke:
         # 54 cells × 2 seeds = 108 scenarios
-        bench(n_seeds=2, reps=args.reps or 1, label="smoke",
-              freed_mode=mode)
+        rec = bench(n_seeds=2, reps=args.reps or 1, label="smoke",
+                    freed_mode=mode)
     else:
         # 54 cells × 19 seeds = 1026 scenarios in one batched program
-        bench(n_seeds=19, reps=args.reps or 2, label="sweep1k",
-              freed_mode=mode)
+        rec = bench(n_seeds=19, reps=args.reps or 2, label="sweep1k",
+                    freed_mode=mode)
+    if args.json is not None:
+        args.json.parent.mkdir(parents=True, exist_ok=True)
+        args.json.write_text(json.dumps(rec, indent=2))
 
 
 if __name__ == "__main__":

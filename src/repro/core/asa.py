@@ -179,6 +179,74 @@ def step(
     return state, a
 
 
+# ---------------------------------------------------------------------------
+# Scan-safe conditional drivers.  The xsim batched engine carries an ASAState
+# through a ``lax.scan`` and fires estimator events (Algorithm-1 line-4 draws
+# at stage submissions, tuned §4.5 updates at stage starts) behind data-
+# dependent predicates.  ``lax.cond`` keeps the PRNG untouched on the no-op
+# path, so the key-consumption *order* matches the event-driven
+# ``strategies.ASAEstimator`` call-for-call — the property differential
+# cross-validation relies on.
+# ---------------------------------------------------------------------------
+
+
+def sample_wait_if(state: ASAState, bins: jax.Array, do: jax.Array,
+                   greedy: jax.Array | bool = False
+                   ) -> tuple[ASAState, jax.Array]:
+    """Draw a waiting-time estimate, only when ``do`` is True.
+
+    ``greedy=False``: Algorithm-1 line-4 categorical draw — the key is
+    split (and the draw made) only on the True branch, mirroring
+    ``ASAEstimator.predict`` for the tuned policy call-for-call.
+    ``greedy=True``: the current MAP wait, no key consumed — consistent
+    across a scenario's stages, which is what keeps the §3.2 cascade
+    stable when p is still multi-modal (over-prediction cancels out of
+    E_y − a_{y+1} when the estimates agree). A *python* bool stakes the
+    choice out at trace time (the fleet sweep's hot path never traces the
+    RNG); a traced bool selects per scenario.
+    """
+    b = bins.astype(jnp.float32)
+
+    def pick_map(s: ASAState) -> tuple[ASAState, jax.Array]:
+        return s, b[greedy_action(s)]
+
+    def pick_sample(s: ASAState) -> tuple[ASAState, jax.Array]:
+        s, a = sample_action(s)
+        return s, b[a]
+
+    if isinstance(greedy, bool):
+        yes = pick_map if greedy else pick_sample
+    else:
+        def yes(s: ASAState) -> tuple[ASAState, jax.Array]:
+            return jax.lax.cond(greedy, pick_map, pick_sample, s)
+
+    return jax.lax.cond(do, yes, lambda s: (s, jnp.float32(0.0)), state)
+
+
+def learn_wait_if(state: ASAState, bins: jax.Array, true_wait: jax.Array,
+                  do: jax.Array, gamma: float = 1.0) -> ASAState:
+    """One within-run learning event, only when ``do`` is True.
+
+    Replicates ``strategies.ASAEstimator.learn`` (= ``step`` with the
+    tuned §4.5 policy at its default 50 repetitions, whose γ/50 divisor
+    the repetition count cancels) without the jit wrapper: sample,
+    observe the chosen entry of the eq.-(3) zero/one loss at the observed
+    wait, then the full-information sharpening pass.
+    """
+    from repro.core.losses import zero_one
+
+    lv = zero_one(bins.astype(jnp.float32),
+                  jnp.maximum(true_wait.astype(jnp.float32), 1.0))
+    g = jnp.float32(gamma)
+
+    def yes(s: ASAState) -> ASAState:
+        s, a = sample_action(s)
+        s = observe(s, a, lv[a], g)
+        return observe_full(s, lv, g / 50.0, 50)
+
+    return jax.lax.cond(do, yes, lambda s: s, state)
+
+
 def init_batch(m: int, n: int, key: jax.Array) -> ASAState:
     """A fleet of ``n`` independent estimators (one per job geometry)."""
     keys = jax.random.split(key, n)

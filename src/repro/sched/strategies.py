@@ -19,6 +19,11 @@ from repro.core.losses import zero_one
 from repro.sched.queue_sim import QueueSim
 from repro.sched.workflows import Workflow
 
+# §4.5 ASA-Naive miss handling (single source of truth — xsim mirrors
+# these; the cross-engine differential tests pin the shared values)
+NAIVE_IDLE_THRESHOLD_S = 300.0   # idle the early allocation up to this gap
+NAIVE_CANCEL_LATENCY_S = 60.0    # charged OH when cancelling instead
+
 
 @dataclass
 class RunMetrics:
@@ -110,8 +115,8 @@ def run_asa(
     est: ASAEstimator,
     *,
     use_dependencies: bool = True,
-    naive_idle_threshold_s: float = 300.0,
-    naive_cancel_latency_s: float = 60.0,
+    naive_idle_threshold_s: float = NAIVE_IDLE_THRESHOLD_S,
+    naive_cancel_latency_s: float = NAIVE_CANCEL_LATENCY_S,
 ) -> RunMetrics:
     """ASA pro-active submission (§3.2, Fig. 4).
 

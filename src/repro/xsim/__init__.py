@@ -8,15 +8,15 @@ the EASY-backfill reservation scan. See README.md in this package for the
 design and its approximations.
 """
 
-from repro.xsim.state import (ASA, BIGJOB, PER_STAGE, POLICY_NAMES,
-                              ScenarioState)
+from repro.xsim.state import (ASA, ASA_NAIVE, BIGJOB, CANCELLED, PER_STAGE,
+                              POLICY_NAMES, ScenarioState)
 from repro.xsim.events import simulate, sweep
 from repro.xsim.grid import (ScenarioGrid, XSimConfig, center_params,
                              make_grid, run_grid)
 from repro.xsim.compare import batched_metrics, metrics
 
 __all__ = [
-    "ASA", "BIGJOB", "PER_STAGE", "POLICY_NAMES", "ScenarioState",
-    "simulate", "sweep", "ScenarioGrid", "XSimConfig", "center_params",
-    "make_grid", "run_grid", "batched_metrics", "metrics",
+    "ASA", "ASA_NAIVE", "BIGJOB", "CANCELLED", "PER_STAGE", "POLICY_NAMES",
+    "ScenarioState", "simulate", "sweep", "ScenarioGrid", "XSimConfig",
+    "center_params", "make_grid", "run_grid", "batched_metrics", "metrics",
 ]

@@ -14,44 +14,65 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.xsim.state import (ASA, DONE, QUEUED, RUNNING, ScenarioState,
-                              empty_table)
+from repro.xsim.state import (ASA, ASA_NAIVE, DONE, QUEUED, RUNNING,
+                              ScenarioState, empty_table)
 
 
 def metrics(s: ScenarioState) -> dict[str, jax.Array]:
     """Per-scenario scalars (vmap over a batched state for fleet metrics).
 
     twt_s is policy-aware: BigJob = the single job's wait, Per-Stage =
-    Σ stage waits, ASA = *perceived* waits (stage 0's wait plus the part
-    of each later stage's wait not hidden behind its predecessor) —
-    matching ``sched.strategies`` exactly.
+    Σ stage waits, ASA / ASA-Naive = *perceived* waits along the stage
+    chain (stage 0's full wait, then the part of each stage's wait not
+    hidden behind its predecessor's logical end, which includes any naive
+    idle hold) — matching ``sched.strategies.run_asa``'s settled-timeline
+    bookkeeping exactly. oh_hours carries the naive over-allocation.
     """
     n = s.status.shape[0]
     wf = s.is_wf
     wait = jnp.where(wf, s.start - s.submit, 0.0)
     wait_sum = jnp.sum(jnp.where(wf, wait, 0.0))
 
-    # ASA perceived wait: first stage full wait, then relu(start_y − end_{y−1})
-    first = wf & (s.start_dep < 0)
-    succ = jnp.clip(s.wf_next, 0, n - 1)
-    has_succ = wf & (s.wf_next >= 0)
-    overlap_wait = jnp.sum(
-        jnp.where(has_succ, jnp.maximum(s.start[succ] - s.end, 0.0), 0.0))
-    asa_twt = jnp.sum(jnp.where(first, wait, 0.0)) + overlap_wait
+    # ASA/naive perceived waits + logical makespan: walk the stage chain,
+    # carrying the logical end  le_y = max(start_y + hold_y, le_{y−1}) + t_y
+    # (run_asa's settled timeline; hold is 0 everywhere but naive misses).
+    rows = jnp.clip(s.wf_rows, 0, n - 1)
 
-    twt = jnp.where(s.policy == ASA, asa_twt, wait_sum)
+    def chain(y, carry):
+        le, twt = carry
+        row = rows[y]
+        ok = (s.wf_rows[y] >= 0) & jnp.isfinite(s.start[row])
+        start_l = s.start[row] + s.hold[y]
+        # a naive stage can start while an earlier stage never did (no
+        # afterok edge + exhausted step budget): its predecessor logical
+        # end is still -inf — count no perceived wait rather than +inf
+        pwt = jnp.where(y == 0, s.start[row] - s.submit[row],
+                        jnp.where(jnp.isneginf(le), 0.0,
+                                  jnp.maximum(s.start[row] - le, 0.0)))
+        new_le = jnp.where(y == 0, start_l,
+                           jnp.maximum(start_l, le)) + s.duration[row]
+        return (jnp.where(ok, new_le, le), twt + jnp.where(ok, pwt, 0.0))
+
+    le, chain_twt = jax.lax.fori_loop(
+        0, s.wf_rows.shape[0], chain,
+        (jnp.float32(-jnp.inf), jnp.float32(0.0)))
+
+    asa_like = (s.policy == ASA) | (s.policy == ASA_NAIVE)
+    twt = jnp.where(asa_like, chain_twt, wait_sum)
 
     wf_end = jnp.max(jnp.where(wf, s.end, -jnp.inf))
-    makespan = wf_end - s.t0
+    makespan = jnp.where(asa_like, le, wf_end) - s.t0
     core_seconds = jnp.sum(jnp.where(wf, s.cores * s.duration, 0.0))
+    oh_hours = s.oh_cs / 3600.0
     done = jnp.sum((wf & (s.status == DONE)).astype(jnp.int32))
     total_wf = jnp.sum(wf.astype(jnp.int32))
     util = s.busy_cs / jnp.maximum(s.total * s.t, 1e-9)
     return {
         "twt_s": twt,
         "makespan_s": makespan,
-        "core_hours": core_seconds / 3600.0,
-        "oh_hours": jnp.float32(0.0),  # xsim models dependency-ASA: OH = 0
+        "core_hours": core_seconds / 3600.0 + oh_hours,
+        "oh_hours": oh_hours,
+        "misses": s.misses,
         "utilization": util,
         "wf_done": done,
         "wf_total": total_wf,

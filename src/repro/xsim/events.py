@@ -3,8 +3,9 @@
 One ``sim_step`` jumps to the next event time (earliest pending submission
 or running-job completion), then applies, as masked array writes:
 
-  completions → per-stage release hook → admissions → ASA chain hook →
-  FCFS/backfill scheduling pass.
+  completions → per-stage release hook → naive resubmit release →
+  admissions → FCFS/backfill scheduling pass → stage-start hook →
+  ASA chain hook.
 
 Same-time cascades (e.g. a per-stage successor released *at* the
 completion instant) simply consume the next scan step at an unchanged
@@ -18,11 +19,27 @@ per-event dataflow):
 * PER_STAGE: when stage y completes, stage y+1's submit time becomes
   "now" — the sequential submit-on-completion loop of
   ``strategies.run_per_stage``.
-* ASA: when stage y is *admitted* (pro-actively submitted) at time s_y,
-  its expected end  E_y = max(s_y + a_y, E_{y-1}) + t_y  chains forward
-  and stage y+1 is scheduled for  max(now, E_y − a_{y+1})  — exactly the
-  cascade of ``strategies.run_asa`` (§3.2, Fig. 4), with the sampled wait
-  estimates a_y frozen at scenario build time (see policies.py).
+* ASA / ASA-Naive *chain* hook: when stage y is first admitted at time
+  s_y, the wait estimate a_y (stage 0 only; later stages were sampled at
+  their predecessor's admission) and the successor's a_{y+1} are sampled
+  from the scenario's LIVE Algorithm-1 estimator, the expected end
+  E_y = max(s_y + a_y, E_{y-1}) + t_y chains forward, and stage y+1 is
+  scheduled for max(now, E_y − a_{y+1}) — exactly the cascade of
+  ``strategies.run_asa`` (§3.2, Fig. 4), now learning within the run.
+* ASA / ASA-Naive *start* hook: when stage y starts, its observed queue
+  wait feeds the tuned §4.5 estimator update (``asa.learn_wait_if``).
+  Under ASA-Naive (no dependency support) an allocation granted before
+  stage y−1's logical end either idles (short gaps ≤ 300 s, charged as
+  OH core-seconds) or is CANCELLED and resubmitted once the predecessor
+  completes (long gaps), charging the cancel latency as OH — mirroring
+  ``strategies.run_asa(use_dependencies=False)``.
+
+The start/chain hooks process ONE pending stage per scan step (estimator
+updates are inherently sequential: each consumes PRNG state); when more
+than one stage fires at the same instant the ``repass`` flag forces extra
+same-time steps until the pending set drains, preserving the event-driven
+runner's per-event ordering without paying per-stage estimator work on
+every step.
 """
 
 from __future__ import annotations
@@ -32,16 +49,32 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core import asa
+from repro.core.bins import make_bins
+from repro.sched.strategies import (NAIVE_CANCEL_LATENCY_S,
+                                    NAIVE_IDLE_THRESHOLD_S)
 from repro.xsim import backfill
-from repro.xsim.state import (ASA, DONE, PENDING, PER_STAGE, QUEUED, RUNNING,
-                              ScenarioState)
+from repro.xsim.state import (ASA, ASA_NAIVE, CANCELLED, DONE, PENDING,
+                              PER_STAGE, QUEUED, RUNNING, ScenarioState)
 
 
-def next_event_time(s: ScenarioState) -> jax.Array:
-    """Earliest pending submit or running end; +inf when nothing remains."""
-    submits = jnp.where(s.status == PENDING, s.submit, jnp.inf)
+def _asa_like(s: ScenarioState) -> jax.Array:
+    return (s.policy == ASA) | (s.policy == ASA_NAIVE)
+
+
+def next_event_time(s: ScenarioState, naive: bool = True) -> jax.Array:
+    """Earliest pending submit or running end; +inf when nothing remains.
+
+    CANCELLED rows with a finite submit are naive resubmissions waiting
+    for their corrected time; ``repass`` pins the next step to the current
+    instant (mid-event estimator/cancel cascades)."""
+    submittable = s.status == PENDING
+    if naive:
+        submittable |= s.status == CANCELLED
+    submits = jnp.where(submittable, s.submit, jnp.inf)
     ends = jnp.where(s.status == RUNNING, s.end, jnp.inf)
-    return jnp.minimum(jnp.min(submits), jnp.min(ends))
+    nxt = jnp.minimum(jnp.min(submits), jnp.min(ends))
+    return jnp.where(s.repass, s.t, nxt)
 
 
 def complete_jobs(s: ScenarioState, now) -> tuple[ScenarioState, jax.Array]:
@@ -51,8 +84,12 @@ def complete_jobs(s: ScenarioState, now) -> tuple[ScenarioState, jax.Array]:
     return s, done
 
 
-def admit_jobs(s: ScenarioState, now) -> tuple[ScenarioState, jax.Array]:
-    adm = (s.status == PENDING) & (s.submit <= now)
+def admit_jobs(s: ScenarioState, now, naive: bool = True
+               ) -> tuple[ScenarioState, jax.Array]:
+    submittable = s.status == PENDING
+    if naive:  # resubmitted CANCELLED rows re-enter the queue
+        submittable |= s.status == CANCELLED
+    adm = submittable & (s.submit <= now)
     s = s._replace(status=jnp.where(adm, QUEUED, s.status))
     return s, adm
 
@@ -66,55 +103,211 @@ def _release_per_stage(s: ScenarioState, newly_done, now) -> ScenarioState:
     return s._replace(submit=submit)
 
 
-def _asa_chain(s: ScenarioState, newly_admitted, now) -> ScenarioState:
-    """Stage y admitted ⇒ fix E_y and schedule stage y+1 pro-actively."""
+def _release_naive_resubmit(s: ScenarioState, newly_done, now
+                            ) -> ScenarioState:
+    """Stage y DONE ⇒ a CANCELLED successor is resubmitted now (§4.5)."""
     n = s.status.shape[0]
-    fire = newly_admitted & s.is_wf & (s.policy == ASA)
-    dep = jnp.clip(s.start_dep, 0, n - 1)
-    prev_ee = jnp.where(s.start_dep < 0, -jnp.inf, s.expected_end[dep])
-    ee = jnp.maximum(s.submit + s.pred_wait, prev_ee) + s.duration
-    expected_end = jnp.where(fire, ee, s.expected_end)
-    succ_ok = fire & (s.wf_next >= 0)
-    succ = jnp.where(succ_ok, s.wf_next, n)
-    succ_submit = jnp.maximum(now, ee - s.pred_wait[jnp.clip(s.wf_next, 0, n - 1)])
-    submit = s.submit.at[succ].set(
-        jnp.where(succ_ok, succ_submit, 0.0), mode="drop")
-    return s._replace(expected_end=expected_end, submit=submit)
+    succ_c = jnp.clip(s.wf_next, 0, n - 1)
+    fire = (newly_done & s.is_wf & (s.policy == ASA_NAIVE)
+            & (s.wf_next >= 0) & (s.status[succ_c] == CANCELLED))
+    succ = jnp.where(fire, s.wf_next, n)
+    submit = s.submit.at[succ].set(now, mode="drop")
+    return s._replace(submit=submit)
 
 
-def sim_step(s: ScenarioState, *, bf_passes: int = backfill.BF_PASSES,
-             freed_mode: str = "ref") -> ScenarioState:
-    nxt = next_event_time(s)
+def _start_hook(s: ScenarioState, now, bins, naive: bool) -> ScenarioState:
+    """Process ONE pending stage start: naive early handling + learning.
+
+    Mirrors ``strategies.run_asa``'s ``on_started``: compute the gap to
+    the predecessor's *logical* end (start + hold + duration); a positive
+    gap under ASA-Naive is a miss — short gaps idle the allocation
+    (OH += cores·gap), long gaps cancel it (OH += cores·latency) and park
+    the row as CANCELLED until the predecessor completes. Every settled
+    start feeds the tuned estimator with the observed queue wait.
+    ``naive=False`` (a static, batch-level guarantee that no scenario runs
+    ASA-Naive) elides the miss machinery at trace time.
+    """
+    n = s.status.shape[0]
+    pending = s.start_pending
+    any_p = jnp.any(pending)
+    y = jnp.argmax(pending)                     # lowest pending stage
+    row = jnp.clip(s.wf_rows[y], 0, n - 1)
+    wait = now - s.submit[row]                  # observed queue wait
+    repass = s.repass | (jnp.sum(pending) > 1)
+
+    if not naive:
+        return s._replace(
+            est=asa.learn_wait_if(s.est, bins, wait, any_p),
+            start_pending=pending.at[y].set(False),
+            repass=repass,
+        )
+
+    yp = jnp.maximum(y - 1, 0)
+    prev_row = jnp.where(y > 0, s.wf_rows[yp], -1)
+    pc = jnp.clip(prev_row, 0, n - 1)
+    prev_started = (prev_row >= 0) & jnp.isfinite(s.start[pc])
+    # a cancelled-not-yet-resubmitted predecessor still projects a logical
+    # end from its aborted attempt (QueueSim's jobs[y−1] keeps start_time
+    # until the resubmission replaces it)
+    prev_cancelled = ((prev_row >= 0) & (s.status[pc] == CANCELLED)
+                      & jnp.isfinite(s.canc_start[yp]))
+    prev_logical = jnp.where(
+        prev_row < 0, -jnp.inf,
+        jnp.where(prev_started, s.start[pc] + s.hold[yp] + s.duration[pc],
+                  jnp.where(prev_cancelled,
+                            s.canc_start[yp] + s.duration[pc], jnp.inf)))
+    early = prev_logical - now
+    is_early = any_p & (s.policy == ASA_NAIVE) & (early > 0.0)
+    do_cancel = is_early & (early > NAIVE_IDLE_THRESHOLD_S)
+    do_hold = is_early & ~do_cancel
+    do_learn = any_p & ~do_cancel
+
+    est = asa.learn_wait_if(s.est, bins, wait, do_learn)
+
+    prev_done = (prev_row >= 0) & (s.status[pc] == DONE)
+    resub_t = jnp.where(prev_done, now, jnp.inf)
+    return s._replace(
+        est=est,
+        start_pending=pending.at[y].set(False),
+        hold=s.hold.at[y].set(jnp.where(do_hold, early, s.hold[y])),
+        oh_cs=s.oh_cs
+        + jnp.where(do_hold, s.cores[row] * early, 0.0)
+        + jnp.where(do_cancel, s.cores[row] * NAIVE_CANCEL_LATENCY_S, 0.0),
+        misses=s.misses + is_early.astype(jnp.int32),
+        status=s.status.at[row].set(
+            jnp.where(do_cancel, CANCELLED, s.status[row])),
+        canc_start=s.canc_start.at[y].set(
+            jnp.where(do_cancel, s.start[row], s.canc_start[y])),
+        start=s.start.at[row].set(
+            jnp.where(do_cancel, jnp.inf, s.start[row])),
+        end=s.end.at[row].set(
+            jnp.where(do_cancel, jnp.inf, s.end[row])),
+        submit=s.submit.at[row].set(
+            jnp.where(do_cancel, resub_t, s.submit[row])),
+        free=s.free + jnp.where(do_cancel, s.cores[row], 0.0),
+        repass=repass | do_cancel,
+    )
+
+
+def _chain_hook(s: ScenarioState, now, bins, greedy) -> ScenarioState:
+    """Process ONE pending stage admission: live-sample the §3.2 cascade.
+
+    Stage y first admitted at s_y ⇒ (stage 0 only) sample a_0, fix
+    E_y = max(s_y + a_y, E_{y-1}) + t_y, sample the successor's a_{y+1}
+    from the live estimator and schedule it for max(now, E_y − a_{y+1}).
+    """
+    n = s.status.shape[0]
+    pending = s.chain_pending
+    any_p = jnp.any(pending)
+    y = jnp.argmax(pending)
+    row = jnp.clip(s.wf_rows[y], 0, n - 1)
+
+    # stage 0 samples its own wait estimate at submission (later stages
+    # were sampled at their predecessor's admission, below)
+    need_a0 = any_p & (y == 0)
+    if greedy is True:
+        # static greedy: both draws read the same (unchanged) MAP — one
+        # argmax serves a0 and a1, and no PRNG is traced at all
+        w_map = asa.map_wait(s.est, bins.astype(jnp.float32))
+        est, a0 = s.est, jnp.where(need_a0, w_map, 0.0)
+    else:
+        est, a0 = asa.sample_wait_if(s.est, bins, need_a0, greedy)
+    pw_row = jnp.where(need_a0, a0, s.pred_wait[row])
+
+    prev_row = jnp.where(y > 0, s.wf_rows[jnp.maximum(y - 1, 0)], -1)
+    pc = jnp.clip(prev_row, 0, n - 1)
+    prev_ee = jnp.where(prev_row < 0, -jnp.inf, s.expected_end[pc])
+    # `now` IS the admission instant (events never skip a pending submit;
+    # repass steps hold time still); the stage's own submit entry may
+    # already have been rewritten by a same-instant naive cancel
+    ee = jnp.maximum(now + pw_row, prev_ee) + s.duration[row]
+
+    succ = s.wf_next[row]
+    sc = jnp.clip(succ, 0, n - 1)
+    has_succ = any_p & (succ >= 0)
+    if greedy is True:
+        a1 = jnp.where(has_succ, w_map, 0.0)
+    else:
+        est, a1 = asa.sample_wait_if(est, bins, has_succ, greedy)
+
+    pred_wait = s.pred_wait.at[row].set(pw_row)
+    pred_wait = pred_wait.at[sc].set(
+        jnp.where(has_succ, a1, pred_wait[sc]))
+    return s._replace(
+        est=est,
+        chain_pending=pending.at[y].set(False),
+        pred_wait=pred_wait,
+        expected_end=s.expected_end.at[row].set(
+            jnp.where(any_p, ee, s.expected_end[row])),
+        submit=s.submit.at[sc].set(
+            jnp.where(has_succ, jnp.maximum(now, ee - a1), s.submit[sc])),
+        repass=s.repass | (jnp.sum(pending) > 1),
+    )
+
+
+def sim_step(s: ScenarioState, bins, *, bf_passes: int = backfill.BF_PASSES,
+             freed_mode: str = "ref", pred_mode: str | None = None,
+             naive: bool = True) -> ScenarioState:
+    """One event step. ``pred_mode`` None reads the per-scenario
+    ``pred_greedy`` flag (traced); ``"greedy"``/``"sample"`` stake the
+    prediction rule out statically — the greedy fleet hot path then never
+    traces the categorical draw. ``naive=False`` asserts (statically) that
+    no scenario in the batch runs ASA-Naive, eliding the cancel/resubmit
+    machinery; ``grid.run_grid`` sets it from the grid's policy roster."""
+    greedy = {None: s.pred_greedy, "greedy": True,
+              "sample": False}[pred_mode]
+    nxt = next_event_time(s, naive)
     now = jnp.where(jnp.isfinite(nxt), jnp.maximum(nxt, s.t), s.t)
     # utilization integral over (t, now] at the pre-event allocation
     busy_cs = s.busy_cs + (s.total - s.free) * (now - s.t)
-    s = s._replace(t=now, busy_cs=busy_cs)
+    s = s._replace(t=now, busy_cs=busy_cs, repass=jnp.asarray(False))
     s, newly_done = complete_jobs(s, now)
     s = _release_per_stage(s, newly_done, now)
-    s, newly_admitted = admit_jobs(s, now)
-    s = _asa_chain(s, newly_admitted, now)
-    return backfill.schedule_pass(s, bf_passes=bf_passes,
-                                  freed_mode=freed_mode)
+    if naive:
+        s = _release_naive_resubmit(s, newly_done, now)
+    s, newly_admitted = admit_jobs(s, now, naive)
+    # first admissions of ASA/naive stages queue a chain-hook event
+    # (the -inf expected_end sentinel keeps resubmissions from re-firing)
+    rows = jnp.clip(s.wf_rows, 0, s.status.shape[0] - 1)
+    stage_ok = (s.wf_rows >= 0) & _asa_like(s)
+    s = s._replace(chain_pending=s.chain_pending | (
+        stage_ok & newly_admitted[rows] & jnp.isneginf(s.expected_end[rows])))
+    pre_start = s.start
+    s = backfill.schedule_pass(s, bf_passes=bf_passes, freed_mode=freed_mode)
+    started = (s.status == RUNNING) & jnp.isinf(pre_start)
+    s = s._replace(start_pending=s.start_pending | (
+        stage_ok & started[rows]))
+    s = _start_hook(s, now, bins, naive)     # learn (+ naive miss) first …
+    return _chain_hook(s, now, bins, greedy)  # … then predict, as the
+    #                                           event-driven sim does
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("n_steps", "bf_passes", "freed_mode"))
+                   static_argnames=("n_steps", "bf_passes", "freed_mode",
+                                    "pred_mode", "naive"))
 def simulate(s: ScenarioState, *, n_steps: int,
              bf_passes: int = backfill.BF_PASSES,
-             freed_mode: str = "ref") -> ScenarioState:
+             freed_mode: str = "ref", pred_mode: str | None = None,
+             naive: bool = True) -> ScenarioState:
     """Run ``n_steps`` event steps (idempotent once events are drained)."""
+    m = s.est.log_p.shape[-1]
+    bins = jnp.asarray(make_bins(m), jnp.float32)
+
     def body(s, _):
-        return sim_step(s, bf_passes=bf_passes, freed_mode=freed_mode), None
+        return sim_step(s, bins, bf_passes=bf_passes, freed_mode=freed_mode,
+                        pred_mode=pred_mode, naive=naive), None
 
     s, _ = jax.lax.scan(body, s, None, length=n_steps)
     return s
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("n_steps", "bf_passes", "freed_mode"))
+                   static_argnames=("n_steps", "bf_passes", "freed_mode",
+                                    "pred_mode", "naive"))
 def sweep(batched: ScenarioState, *, n_steps: int,
           bf_passes: int = backfill.BF_PASSES,
-          freed_mode: str = "ref") -> ScenarioState:
+          freed_mode: str = "ref", pred_mode: str | None = None,
+          naive: bool = True) -> ScenarioState:
     """The fleet program: vmap(simulate) over a batched ScenarioState.
 
     ``freed_mode="tpu"`` routes the reservation scan through the Pallas
@@ -122,5 +315,6 @@ def sweep(batched: ScenarioState, *, n_steps: int,
     """
     return jax.vmap(
         lambda s: simulate(s, n_steps=n_steps, bf_passes=bf_passes,
-                           freed_mode=freed_mode)
+                           freed_mode=freed_mode, pred_mode=pred_mode,
+                           naive=naive)
     )(batched)

@@ -26,8 +26,8 @@ import numpy as np
 from repro.sched.centers import CENTERS, CenterProfile
 from repro.sched.workflows import WORKFLOWS
 from repro.xsim import backfill, events, policies
-from repro.xsim.state import (INVALID, PENDING, POLICY_NAMES, QUEUED,
-                              RUNNING, ScenarioState)
+from repro.xsim.state import (ASA_NAIVE, BIGJOB, INVALID, PENDING,
+                              POLICY_NAMES, QUEUED, RUNNING, ScenarioState)
 
 
 class XCenter(NamedTuple):
@@ -70,6 +70,16 @@ class XSimConfig:
     t0: float = 7200.0       # workflow submission epoch (runner.WARMUP_S)
     horizon: float = 10 * 86400.0  # arrivals beyond this are dropped
     warm_fill: float = 0.97  # warm-start capacity target (QueueSim's 97%)
+    pred_mode: str = "greedy"  # cascade a_y: live MAP ("greedy") or the
+    #   Algorithm-1 line-4 draw ("sample"). Fleet sweeps default to the
+    #   consistent MAP — the estimator still learns (and the MAP moves)
+    #   within the run; i.i.d. draws from a still-multi-modal p can delay
+    #   a successor by the full bin gap. "sample" matches the event-driven
+    #   tuned runner call-for-call (cross-validation uses state.freeze).
+
+    def __post_init__(self) -> None:
+        if self.pred_mode not in ("greedy", "sample"):
+            raise ValueError(f"unknown pred_mode {self.pred_mode!r}")
 
     @property
     def max_jobs(self) -> int:
@@ -84,9 +94,13 @@ class XSimConfig:
 
 def build_scenario(key: jax.Array, center: XCenter, wf_cores: jax.Array,
                    wf_durs: jax.Array, wf_valid: jax.Array,
-                   preds: jax.Array, policy: jax.Array,
+                   est, policy: jax.Array,
                    cfg: XSimConfig) -> ScenarioState:
-    """One scenario as a pure function of (key, cell data). vmap freely."""
+    """One scenario as a pure function of (key, cell data). vmap freely.
+
+    ``est`` is the scenario's live Algorithm-1 estimator (its geometry's
+    fleet slice, see ``policies.scenario_estimators``) — predictions are
+    sampled from it, and it learns, inside the event scan."""
     k_warm_c, k_warm_d, k_warm_u, k_back_c, k_back_d, k_arr_g, k_arr_b, \
         k_arr_c, k_arr_d = jax.random.split(key, 9)
     total = center.total_cores
@@ -132,19 +146,22 @@ def build_scenario(key: jax.Array, center: XCenter, wf_cores: jax.Array,
     ad = durations(k_arr_d, cfg.n_arrivals)
     a_ok = a_submit <= cfg.horizon
 
-    # --- workflow rows (policy is data: all three variants, selected) ---
+    # --- workflow rows (policy is data: all four variants, selected) ----
     wf_off = cfg.n_warm + cfg.n_backlog + cfg.n_arrivals
     y = jnp.arange(cfg.max_stages)
     peak = jnp.max(wf_cores)
     total_dur = jnp.sum(jnp.where(wf_valid, wf_durs, 0.0))
-    is_big = policy == 0
+    is_big = policy == BIGJOB
+    naive = policy == ASA_NAIVE  # ASA-Naive: cascade rows, no afterok edge
     f_valid = jnp.where(is_big, y == 0, wf_valid)
     f_cores = jnp.where(is_big, jnp.where(y == 0, peak, 0.0), wf_cores)
     f_durs = jnp.where(is_big, jnp.where(y == 0, total_dur, 0.0), wf_durs)
     f_submit = jnp.where(y == 0, cfg.t0, jnp.inf)
     nxt_valid = jnp.concatenate([f_valid[1:], jnp.zeros(1, bool)])
     f_next = jnp.where(f_valid & nxt_valid & ~is_big, wf_off + y + 1, -1)
-    f_dep = jnp.where(f_valid & (y > 0) & ~is_big, wf_off + y - 1, -1)
+    f_dep = jnp.where(f_valid & (y > 0) & ~is_big & ~naive,
+                      wf_off + y - 1, -1)
+    f_rows = jnp.where(f_valid, wf_off + y, -1)
 
     # --- assemble the table ---------------------------------------------
     def cat(warm, back, arr, wf):
@@ -173,16 +190,24 @@ def build_scenario(key: jax.Array, center: XCenter, wf_cores: jax.Array,
                   f_next).astype(jnp.int32)
     is_wf = cat(zeros(nwm, bool), zeros(nbk, bool), zeros(nar, bool),
                 f_valid)
-    pred_wait = cat(zeros(nwm), zeros(nbk), zeros(nar), preds)
 
     return ScenarioState(
         submit=submit, cores=cores, duration=duration, start=start, end=end,
         status=status, start_dep=start_dep, wf_next=wf_next, is_wf=is_wf,
-        pred_wait=pred_wait,
+        pred_wait=zeros(cfg.max_jobs),
         expected_end=jnp.full(cfg.max_jobs, -jnp.inf),
+        wf_rows=f_rows.astype(jnp.int32),
+        hold=zeros(cfg.max_stages),
+        canc_start=jnp.full(cfg.max_stages, jnp.inf),
+        start_pending=zeros(cfg.max_stages, bool),
+        chain_pending=zeros(cfg.max_stages, bool),
+        est=est,
         t=jnp.float32(0.0), free=free, total=total,
         policy=policy.astype(jnp.int32), t0=jnp.float32(cfg.t0),
         busy_cs=jnp.float32(0.0), min_free=free,
+        oh_cs=jnp.float32(0.0), misses=jnp.int32(0),
+        repass=jnp.asarray(False),
+        pred_greedy=jnp.asarray(cfg.pred_mode == "greedy"),
     )
 
 
@@ -209,9 +234,10 @@ class ScenarioGrid:
     def n(self) -> int:
         return int(self.policies.shape[0])
 
-    def build(self, preds: jax.Array) -> ScenarioState:
+    def build(self, ests) -> ScenarioState:
+        """``ests`` is a (B,)-batched ASAState (per-scenario estimators)."""
         return build_batch(self.keys, self.centers, self.wf_cores,
-                           self.wf_durs, self.wf_valid, preds,
+                           self.wf_durs, self.wf_valid, ests,
                            self.policies, self.cfg)
 
 
@@ -275,20 +301,25 @@ def run_grid(grid: ScenarioGrid, fleet=None, *, pred_seed: int = 1,
     """Build + sweep the whole grid in one jitted batched program.
 
     ``fleet`` is a batched ASAState (one estimator per geometry); when
-    None a fresh fleet is initialised (cold predictions). ``freed_mode``
-    selects the reservation-scan backend (``"tpu"`` = Pallas kernel).
-    Returns (final_states, metrics dict of (B,) arrays).
+    None a fresh fleet is initialised (cold estimators). Every scenario
+    carries its geometry's live estimator slice through the scan —
+    predictions are sampled, and learning happens, *within* the run;
+    ``pred_seed`` decorrelates the per-scenario PRNG streams across
+    sweeps. ``freed_mode`` selects the reservation-scan backend
+    (``"tpu"`` = Pallas kernel). Returns (final_states, metrics dict of
+    (B,) arrays).
     """
     from repro.xsim import compare
 
     if fleet is None:
         fleet = policies.init_fleet(int(grid.geo_idx.max()) + 1)
-    preds = policies.sample_predictions(
-        fleet, jnp.asarray(grid.geo_idx), jax.random.PRNGKey(pred_seed),
-        grid.cfg.max_stages)
-    states = grid.build(preds)
+    ests = policies.scenario_estimators(
+        fleet, jnp.asarray(grid.geo_idx), pred_seed)
+    states = grid.build(ests)
+    has_naive = bool(np.any(np.asarray(grid.policies) == ASA_NAIVE))
     final = events.sweep(states, n_steps=grid.cfg.n_steps,
-                         bf_passes=bf_passes, freed_mode=freed_mode)
+                         bf_passes=bf_passes, freed_mode=freed_mode,
+                         pred_mode=grid.cfg.pred_mode, naive=has_naive)
     return final, compare.batched_metrics(final)
 
 

@@ -1,19 +1,23 @@
-"""Strategy drivers for xsim: BigJob / Per-Stage / ASA job-table rows, and
-the ASA estimator-fleet wiring (`repro.core.asa.init_batch`/`batched_step`).
+"""Strategy drivers for xsim: BigJob / Per-Stage / ASA / ASA-Naive job-table
+rows, and the ASA estimator-fleet wiring (`repro.core.asa.init_batch`).
 
-A strategy is *data* in xsim: the same event engine runs all three, they
+A strategy is *data* in xsim: the same event engine runs all four, they
 differ only in the workflow rows written into the job table (and the
 per-policy hooks in events.py). ``add_workflow`` builds those rows
 host-side for a single scenario (cross-validation, tests); grid.py builds
 the same rows as traced jnp for vmapped scenario construction.
 
-ASA's sampled wait estimates a_y are drawn from the fleet *before* the
-sweep (frozen per scenario) — the event-driven ``strategies.run_asa``
-re-samples from a state that also learns mid-run; freezing is the price
-of keeping the sweep a single batched program, and is a good
-approximation because within-run learning moves p by at most s ≪ warm-up
-observations. Learning happens between sweeps via ``update_fleet``
-(paper §4.3: Algorithm-1 state persists across runs).
+ASA's wait estimates a_y are sampled from the scenario's LIVE estimator
+*inside* the scan (events.py chain hook) and the estimator learns from
+every observed stage wait mid-scenario — the frozen pre-draw of the first
+xsim release is gone. The §4.3 cross-run persistence loop on top of that
+is ``update_fleet``: between sweeps, each geometry's shared estimator
+absorbs the observed first-stage waits and seeds the next sweep's
+per-scenario states (``grid.run_grid`` slices the fleet per scenario).
+
+ASA-Naive (§4.5, no dependency support) shares ASA's cascade rows but
+drops the afterok edge; the events.py start hook charges idle/cancel
+overhead and resubmits cancelled allocations.
 """
 
 from __future__ import annotations
@@ -27,7 +31,7 @@ from repro.core import asa
 from repro.core.bins import make_bins
 from repro.core.losses import zero_one
 from repro.sched.workflows import Workflow
-from repro.xsim.state import ASA, BIGJOB, PENDING, add_job
+from repro.xsim.state import ASA, ASA_NAIVE, BIGJOB, PENDING, add_job
 
 # ------------------------------------------------------------ stage tables
 
@@ -49,12 +53,15 @@ def stage_arrays(wf: Workflow, scale: int, max_stages: int
 
 
 def add_workflow(table: dict[str, np.ndarray], offset: int, wf: Workflow,
-                 scale: int, policy: int, t0: float,
-                 preds: np.ndarray | None = None) -> int:
+                 scale: int, policy: int, t0: float) -> int:
     """Write one workflow's stage rows into a host-side table.
 
-    Returns the number of rows used. ``preds`` are the ASA wait estimates
-    a_y (seconds), required when ``policy == ASA``.
+    Returns the number of rows used. ASA rows carry the afterok
+    dependency edge; ASA-Naive rows share the cascade structure
+    (``wf_next``) but not the dependency — their early starts are
+    handled by the events.py naive hook. Wait estimates are sampled at
+    run time from the scenario's live estimator, so no predictions are
+    written here.
     """
     if policy == BIGJOB:
         add_job(table, offset, cores=wf.peak_cores(scale),
@@ -62,17 +69,15 @@ def add_workflow(table: dict[str, np.ndarray], offset: int, wf: Workflow,
                 is_wf=True)
         return 1
     s = len(wf.stages)
-    if policy == ASA and (preds is None or len(preds) < s):
-        raise ValueError("ASA policy needs one wait estimate per stage")
+    with_dep = policy == ASA  # naive (§4.5): no dependency support
     for y, st in enumerate(wf.stages):
         add_job(
             table, offset + y,
             cores=st.cores(scale), duration=st.duration(scale),
             submit=t0 if y == 0 else np.inf, status=PENDING,
-            start_dep=offset + y - 1 if y > 0 else -1,
+            start_dep=offset + y - 1 if y > 0 and with_dep else -1,
             wf_next=offset + y + 1 if y + 1 < s else -1,
             is_wf=True,
-            pred_wait=float(preds[y]) if policy == ASA else 0.0,
         )
     return s
 
@@ -85,36 +90,22 @@ def init_fleet(n: int, m: int = 53, seed: int = 0) -> asa.ASAState:
     return asa.init_batch(m, n, jax.random.PRNGKey(seed))
 
 
-def sample_predictions(fleet: asa.ASAState, geo_idx: jax.Array,
-                       key: jax.Array, n_preds: int,
-                       bins: jax.Array | None = None,
-                       mode: str = "greedy") -> jax.Array:
-    """(n_scenarios, n_preds) wait estimates for the frozen ASA cascade.
+def scenario_estimators(fleet: asa.ASAState, geo_idx: jax.Array,
+                        pred_seed: int = 1) -> asa.ASAState:
+    """Slice the per-geometry fleet into per-scenario live estimators.
 
-    ``greedy`` (default) gives every stage its geometry's MAP wait. The
-    event-driven runner re-samples from a state that re-sharpens at every
-    stage start; with predictions frozen before the sweep, *consistency*
-    across a scenario's stages is what keeps the §3.2 cascade stable —
-    uniformly wrong-but-equal estimates degrade gracefully in both
-    directions (under-prediction is absorbed by the afterok dependency,
-    over-prediction cancels out of E_y − a_{y+1}), whereas i.i.d. draws
-    from a multi-modal p can delay a successor by the full bin gap.
-    ``sample`` draws Algorithm-1 line-4 actions i.i.d. instead.
+    Every scenario gets its geometry's current state (log_p, round state)
+    with an independent PRNG key (folded from the geometry key, the sweep
+    seed and the scenario index), so sibling seeds of one cell draw
+    independent Algorithm-1 action sequences — as independent runs against
+    the shared state do in the event-driven campaign.
     """
-    if bins is None:
-        bins = jnp.asarray(make_bins(fleet.log_p.shape[-1]), jnp.float32)
-    log_p = fleet.log_p[geo_idx]                     # (n_scenarios, m)
-    if mode == "greedy":
-        acts = jnp.broadcast_to(jnp.argmax(log_p, axis=-1)[:, None],
-                                (log_p.shape[0], n_preds))
-    elif mode == "sample":
-        keys = jax.random.split(key, log_p.shape[0])
-        acts = jax.vmap(
-            lambda k, lp: jax.random.categorical(k, lp, shape=(n_preds,))
-        )(keys, log_p)
-    else:
-        raise ValueError(f"unknown prediction mode {mode!r}")
-    return bins[acts]
+    per = jax.tree.map(lambda x: x[geo_idx], fleet)
+    n = geo_idx.shape[0]
+    keys = jax.vmap(jax.random.fold_in)(
+        per.key, jnp.arange(n, dtype=jnp.uint32) + jnp.uint32(pred_seed) *
+        jnp.uint32(100_003))
+    return per._replace(key=keys)
 
 
 def update_fleet(fleet: asa.ASAState, waits: jax.Array,

@@ -8,6 +8,16 @@ masked array writes, so the whole simulation is a pure JAX program:
 ``lax.scan`` advances event time, ``jax.vmap`` runs thousands of
 independent scenarios as one batched program (see events.py / grid.py).
 
+ASA-Naive (§4.5) adds one backwards edge to the ladder: an allocation
+granted long before its predecessor finishes is CANCELLED at its start
+instant and re-enters the queue (CANCELLED → QUEUED) once the predecessor
+completes — the only non-monotone transition, and it is always explicit.
+
+Each scenario also carries its own live ``core.asa.ASAState`` (the
+per-geometry Algorithm-1 estimator), so cascade wait estimates are
+sampled — and the estimator updated — *inside* the ``lax.scan``, matching
+the event-driven runner's within-run learning.
+
 This trades the event-driven simulator's unbounded heap for a static
 ``(max_jobs,)`` shape — the price of jit: scenarios must declare an upper
 bound on how many jobs they contain. See README.md for the full list of
@@ -22,28 +32,36 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import asa
+from repro.core.bins import M_DEFAULT
+
 # --- job status ladder -----------------------------------------------------
 INVALID = 0   # empty slot (padding)
 PENDING = 1   # exists but not yet submitted (submit time possibly unknown)
 QUEUED = 2    # submitted, waiting in the FCFS queue
 RUNNING = 3
 DONE = 4
+CANCELLED = 5  # ASA-Naive early allocation, cancelled at start (§4.5)
 
 # --- scenario policy ids (mirrors sched.strategies) ------------------------
 BIGJOB = 0
 PER_STAGE = 1
 ASA = 2
+ASA_NAIVE = 3
 
-POLICY_NAMES = ("bigjob", "per_stage", "asa")
+POLICY_NAMES = ("bigjob", "per_stage", "asa", "asa_naive")
 
 INF = jnp.inf
+
+M_BINS = M_DEFAULT  # paper §4.3 wait-time alternatives (m = 53)
 
 
 class ScenarioState(NamedTuple):
     """One scenario's full simulation state (a pytree of arrays).
 
-    Job-table fields are ``(max_jobs,)``; the rest are scalars. ``vmap``
-    over the leading axis gives a fleet of scenarios.
+    Job-table fields are ``(max_jobs,)``, ``wf_rows`` is ``(max_stages,)``,
+    ``est`` is the scenario's live ASA estimator, the rest are scalars.
+    ``vmap`` over the leading axis gives a fleet of scenarios.
     """
 
     # job table ------------------------------------------------------------
@@ -56,16 +74,28 @@ class ScenarioState(NamedTuple):
     start_dep: jax.Array    # i32 (max_jobs,) row idx of afterok dep, -1 none
     wf_next: jax.Array      # i32 (max_jobs,) successor stage row, -1 none
     is_wf: jax.Array        # bool (max_jobs,) workflow (not background) job
-    pred_wait: jax.Array    # f32 (max_jobs,) ASA's sampled wait estimate a_y
+    pred_wait: jax.Array    # f32 (max_jobs,) ASA's live-sampled estimate a_y
     expected_end: jax.Array  # f32 (max_jobs,) ASA chain E[end_y]; -inf unset
+    # workflow chain (stage-indexed, (max_stages,)) ------------------------
+    wf_rows: jax.Array      # i32 stage y -> row idx, -1 none
+    hold: jax.Array         # f32 naive idle-hold before stage y's compute
+    canc_start: jax.Array   # f32 stage y's cancelled attempt's start; +inf
+    start_pending: jax.Array  # bool stage start-hook not yet processed
+    chain_pending: jax.Array  # bool stage chain-hook not yet processed
+    # live estimator -------------------------------------------------------
+    est: asa.ASAState       # this scenario's Algorithm-1 state (learns in-scan)
     # scalars ---------------------------------------------------------------
     t: jax.Array            # f32 () current simulation time
     free: jax.Array         # f32 () free cores
     total: jax.Array        # f32 () machine size
-    policy: jax.Array       # i32 () BIGJOB / PER_STAGE / ASA
+    policy: jax.Array       # i32 () BIGJOB / PER_STAGE / ASA / ASA_NAIVE
     t0: jax.Array           # f32 () workflow submission epoch
     busy_cs: jax.Array      # f32 () ∫ used_cores dt  (utilization integral)
     min_free: jax.Array     # f32 () min free cores ever seen (invariant probe)
+    oh_cs: jax.Array        # f32 () naive over-allocation core-seconds (OH)
+    misses: jax.Array       # i32 () naive early-start (misprediction) count
+    repass: jax.Array       # bool () force an extra same-time step next
+    pred_greedy: jax.Array  # bool () MAP (consistent) vs line-4 sampled a_y
 
 
 def empty_table(max_jobs: int) -> dict[str, np.ndarray]:
@@ -87,10 +117,38 @@ def empty_table(max_jobs: int) -> dict[str, np.ndarray]:
 
 def freeze(table: dict[str, np.ndarray], *, total_cores: float,
            free_cores: float, now: float = 0.0, policy: int = BIGJOB,
-           t0: float = 0.0) -> ScenarioState:
-    """Build a device ScenarioState from a host-side table + scalars."""
+           t0: float = 0.0, max_stages: int = 9,
+           est: asa.ASAState | None = None,
+           est_seed: int = 0, pred_mode: str = "sample") -> ScenarioState:
+    """Build a device ScenarioState from a host-side table + scalars.
+
+    ``wf_rows`` (the stage chain) is derived from ``is_wf`` row order.
+    ``est`` seeds the scenario's live estimator; the default is a fresh
+    uniform Algorithm-1 state keyed by ``est_seed`` — pass the state of a
+    warmed/persisted estimator to mirror a cross-run ASA (§4.3).
+    ``pred_mode="sample"`` (default) draws cascade estimates a_y by the
+    Algorithm-1 line-4 rule, matching the event-driven tuned runner
+    call-for-call (the cross-validation setting); ``"greedy"`` uses the
+    live MAP, the fleet-sweep default (see grid.XSimConfig).
+    """
+    if pred_mode not in ("sample", "greedy"):
+        raise ValueError(f"unknown pred_mode {pred_mode!r}")
+    max_jobs = table["status"].shape[0]
+    wf_idx = np.nonzero(table["is_wf"])[0]
+    if len(wf_idx) > max_stages:
+        raise ValueError(f"{len(wf_idx)} workflow rows > max_stages")
+    wf_rows = np.full(max_stages, -1, np.int32)
+    wf_rows[:len(wf_idx)] = wf_idx
+    if est is None:
+        est = asa.init(M_BINS, jax.random.PRNGKey(est_seed))
     return ScenarioState(
         **{k: jnp.asarray(v) for k, v in table.items()},
+        wf_rows=jnp.asarray(wf_rows),
+        hold=jnp.zeros(max_stages),
+        canc_start=jnp.full(max_stages, jnp.inf),
+        start_pending=jnp.zeros(max_stages, bool),
+        chain_pending=jnp.zeros(max_stages, bool),
+        est=est,
         t=jnp.float32(now),
         free=jnp.float32(free_cores),
         total=jnp.float32(total_cores),
@@ -98,6 +156,10 @@ def freeze(table: dict[str, np.ndarray], *, total_cores: float,
         t0=jnp.float32(t0),
         busy_cs=jnp.float32(0.0),
         min_free=jnp.float32(free_cores),
+        oh_cs=jnp.float32(0.0),
+        misses=jnp.int32(0),
+        repass=jnp.asarray(False),
+        pred_greedy=jnp.asarray(pred_mode == "greedy"),
     )
 
 

@@ -4,7 +4,10 @@ The cross-validation tests snapshot a live event-driven QueueSim into an
 xsim job table and run both engines from the identical machine state —
 waits and makespans must agree (exactly, for these deterministic
 no-new-arrival scenarios; the assertions allow a small tolerance for the
-bounded-backfill approximation).
+bounded-backfill approximation). Both engines now learn *within* the
+run: the ASA/ASA-Naive differential tests seed identical Algorithm-1
+states on both sides and require the sampled prediction sequences to
+match action-for-action through the whole scenario.
 """
 
 import numpy as np
@@ -13,9 +16,14 @@ import pytest
 import jax
 import jax.numpy as jnp
 
+from repro.core import asa
+from repro.core.bins import make_bins
+from repro.core.losses import zero_one
+from repro.core.regret import empirical_regret, theorem1_bound
 from repro.sched.centers import CenterProfile
 from repro.sched.queue_sim import QueueSim
-from repro.sched.strategies import run_bigjob, run_per_stage
+from repro.sched.strategies import (ASAEstimator, run_asa, run_bigjob,
+                                    run_per_stage)
 from repro.sched.workflows import BLAST, MONTAGE, STATISTICS
 from repro.xsim import backfill, compare, events, policies
 from repro.xsim import state as X
@@ -78,6 +86,67 @@ def test_per_stage_matches_queue_sim(wf, seed):
     _close(float(m["makespan_s"]), ref.makespan_s)
     # utilization sanity on the shared background
     assert 0.0 < float(m["utilization"]) <= 1.0
+
+
+@pytest.mark.parametrize("wf", [STATISTICS, MONTAGE])
+@pytest.mark.parametrize("seed", [0, 2, 3])
+@pytest.mark.parametrize("use_deps", [True, False])
+def test_asa_matches_queue_sim(wf, seed, use_deps):
+    """ASA (and §4.5 ASA-Naive) differential cross-validation.
+
+    Both engines start from the *identical* machine snapshot AND the
+    identical Algorithm-1 estimator state; both learn within the run.
+    Perceived waits, makespans, overhead hours, miss counts and the full
+    sampled prediction sequence must agree — the estimator's PRNG is
+    consumed call-for-call in the same order on both sides.
+    """
+    sim, table, row = _mirrored(seed)   # snapshot BEFORE the ref run
+    free = compare.queue_sim_free_cores(sim)
+    ref = run_asa(sim, wf, 8, "tiny", ASAEstimator(seed=seed + 17),
+                  use_dependencies=use_deps)
+
+    pol = X.ASA if use_deps else X.ASA_NAIVE
+    policies.add_workflow(table, row, wf, 8, pol, t0=600.0)
+    st = freeze(table, total_cores=TINY.total_cores, free_cores=free,
+                now=600.0, policy=pol, t0=600.0,
+                est=asa.init(53, jax.random.PRNGKey(seed + 17)))
+    fin = events.simulate(st, n_steps=300)
+    m = compare.metrics(fin)
+    _close(float(m["twt_s"]), ref.twt_s)
+    _close(float(m["makespan_s"]), ref.makespan_s)
+    assert float(m["oh_hours"]) == pytest.approx(ref.oh_hours, abs=1e-3)
+    assert int(m["misses"]) == ref.misses
+    if use_deps:
+        assert float(m["oh_hours"]) == 0.0  # dependency-ASA never idles
+    # live-sampled cascade estimates match the event-driven sequence
+    # exactly (stage 0's a_0 is not recorded in RunMetrics.pred_waits)
+    preds = np.asarray(fin.pred_wait)[np.asarray(fin.is_wf)]
+    np.testing.assert_allclose(preds[1:len(ref.pred_waits) + 1],
+                               ref.pred_waits)
+    # within-run learning really ran inside the scan: one tuned update
+    # (2 estimator events) per settled stage start
+    assert int(fin.est.t) >= 2 * len(wf.stages)
+
+
+def test_naive_cancel_resubmit_exercised():
+    """Across the differential seeds the naive path must actually cancel:
+    at least one mirrored scenario takes the CANCELLED→resubmit edge and
+    charges cancel-latency OH (montage seed 2 takes seven misses)."""
+    total_miss, total_oh = 0, 0.0
+    for seed in (0, 2, 3):
+        sim, table, row = _mirrored(seed)
+        free = compare.queue_sim_free_cores(sim)
+        policies.add_workflow(table, row, MONTAGE, 8, X.ASA_NAIVE, t0=600.0)
+        st = freeze(table, total_cores=TINY.total_cores, free_cores=free,
+                    now=600.0, policy=X.ASA_NAIVE, t0=600.0,
+                    est=asa.init(53, jax.random.PRNGKey(seed + 17)))
+        fin = events.simulate(st, n_steps=300)
+        m = compare.metrics(fin)
+        total_miss += int(m["misses"])
+        total_oh += float(m["oh_hours"])
+        assert int(m["wf_done"]) == int(m["wf_total"])  # resubmits finish
+    assert total_miss >= 3
+    assert total_oh > 0.0
 
 
 # ------------------------------------------------------------ invariants
@@ -181,19 +250,23 @@ def test_pallas_freed_mode_end_to_end():
     st = freeze(t, policy=X.PER_STAGE, total_cores=100.0, free_cores=100.0)
     a = events.simulate(st, n_steps=40)
     b = events.simulate(st, n_steps=40, freed_mode="interpret")
-    for x, y in zip(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
         np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
 
 
 # ------------------------------------------------- fleet sweep + ordering
 def test_vmapped_sweep_and_table1_ordering():
-    """One jitted vmapped program over the full grid reproduces the
-    paper's qualitative Table-1 ordering:
+    """One jitted vmapped program over the full grid (all four policies,
+    learning within each scan) reproduces the paper's qualitative Table-1
+    ordering:
       CH(asa) == CH(per_stage) < CH(bigjob),
-      TWT(asa) best, makespan(asa) < makespan(per_stage)."""
+      TWT(asa) best, makespan(asa) < makespan(per_stage),
+    and the §4.5 Naive/Dependency trade-off: ASA-Naive pays OH > 0 and
+    loses perceived waiting time to dependency-ASA."""
     cfg = XSimConfig(n_warm=24, n_backlog=16, n_arrivals=24, max_stages=9,
                      t0=3600.0)
-    grid = make_grid(cfg, n_seeds=2, shrink=1 / 64.0)
+    grid = make_grid(cfg, n_seeds=2, shrink=1 / 64.0,
+                     policy_ids=(0, 1, 2, 3))
     fleet = policies.init_fleet(int(grid.geo_idx.max()) + 1)
     fleet = warm_fleet(fleet, grid, rounds=3)
     final, m = run_grid(grid, fleet, pred_seed=7)
@@ -207,18 +280,105 @@ def test_vmapped_sweep_and_table1_ordering():
     for i, lab in enumerate(grid.labels):
         by.setdefault(lab["strategy"], []).append(i)
     mean = {s: {k: float(np.mean(m[k][idx])) for k in
-                ("twt_s", "makespan_s", "core_hours")}
+                ("twt_s", "makespan_s", "core_hours", "oh_hours")}
             for s, idx in by.items()}
 
     # CH(asa) == CH(per_stage) < CH(bigjob)  (paper: BigJob +53% CH)
     assert mean["asa"]["core_hours"] == pytest.approx(
         mean["per_stage"]["core_hours"], rel=1e-6)
     assert mean["bigjob"]["core_hours"] > 1.2 * mean["asa"]["core_hours"]
-    # ASA's perceived waiting time is the best of the three
+    # ASA's perceived waiting time is the best of the strategies
     assert mean["asa"]["twt_s"] < mean["per_stage"]["twt_s"]
     assert mean["asa"]["twt_s"] < mean["bigjob"]["twt_s"]
     # ASA hides stage waits behind execution: beats Per-Stage on makespan
     assert mean["asa"]["makespan_s"] < mean["per_stage"]["makespan_s"]
+    # §4.5 trade-off: without dependency support ASA-Naive mispredicts
+    # into idle/cancel overhead and a worse perceived wait than ASA
+    assert mean["asa_naive"]["oh_hours"] > 0.0
+    assert mean["asa_naive"]["twt_s"] > mean["asa"]["twt_s"]
+    assert mean["asa_naive"]["core_hours"] == pytest.approx(
+        mean["asa"]["core_hours"] + mean["asa_naive"]["oh_hours"], rel=1e-5)
+    # the other strategies never accrue OH
+    for strat in ("bigjob", "per_stage", "asa"):
+        assert mean[strat]["oh_hours"] == 0.0
+
+
+def test_within_run_learning_regret_convergence():
+    """Theorem-1 regression for in-scan learning (paper Appendix A).
+
+    A 3-round warm-started sweep observes a per-geometry wait sequence;
+    on that sequence the adaptive tuned estimator must (a) actually have
+    learned inside the scan (estimator case-counts advanced for ASA
+    scenarios only), (b) keep empirical regret under the Theorem-1 bound,
+    and (c) be no worse than the frozen-MAP baseline — the prediction
+    rule the engine used before within-run learning landed.
+    """
+    cfg = XSimConfig(n_warm=16, n_backlog=12, n_arrivals=16, max_stages=9,
+                     t0=1800.0)
+    grid = make_grid(cfg, n_seeds=4, shrink=1 / 64.0,
+                     workflows=("statistics",), policy_ids=(1, 2))
+    fleet = policies.init_fleet(int(grid.geo_idx.max()) + 1)
+    fleet = warm_fleet(fleet, grid, rounds=3)
+    final, m = run_grid(grid, fleet)
+
+    # (a) the scan carried the estimator: only ASA scenarios learned
+    init_t = np.asarray(fleet.t)[grid.geo_idx]
+    est_t = np.asarray(final.est.t)
+    strat = np.array([lab["strategy"] for lab in grid.labels])
+    is_asa = strat == "asa"
+    assert np.all(est_t[is_asa] > init_t[is_asa])
+    assert np.all(est_t[~is_asa] == init_t[~is_asa])
+
+    # (b) + (c): replay the full 3-round observation sequence per geometry.
+    # The warm rounds + final sweep are the sequence the learner actually
+    # saw; the "frozen" baseline predicts with the cold initial MAP for
+    # the whole campaign — exactly what predictions looked like before
+    # within-run learning landed, on a fresh fleet.
+    n_geo = int(grid.geo_idx.max()) + 1
+    seqs: list[list[float]] = [[] for _ in range(n_geo)]
+    replay_fleet = policies.init_fleet(n_geo)
+    for r in range(3):
+        rf, _ = run_grid(grid, replay_fleet, pred_seed=100 + r)
+        w_r, v_r = stage_waits(rf, cfg)
+        for g in range(n_geo):
+            sel = (grid.geo_idx == g) & is_asa
+            seqs[g].extend(w_r[sel][v_r[sel]].tolist())
+        W = np.zeros((n_geo, 8), np.float32)
+        V = np.zeros((n_geo, 8), bool)
+        for g in range(n_geo):
+            w = w_r[(grid.geo_idx == g) & is_asa, 0]
+            w = w[v_r[(grid.geo_idx == g) & is_asa, 0]][:8]
+            W[g, :len(w)] = w
+            V[g, :len(w)] = True
+        replay_fleet = policies.update_fleet(replay_fleet, jnp.asarray(W),
+                                             jnp.asarray(V))
+    bins = jnp.asarray(make_bins(53), jnp.float32)
+    cold = asa.init(53, jax.random.PRNGKey(0))
+    a_frozen = int(np.argmax(np.asarray(cold.log_p)))  # cold MAP, fixed
+    g_one = jnp.float32(1.0)
+    total_adaptive = total_frozen = 0.0
+    for g in range(n_geo):
+        ws = seqs[g]
+        if not ws:
+            continue
+        L = np.stack([np.asarray(zero_one(bins, jnp.float32(max(w, 1.0))))
+                      for w in ws])
+        state = cold
+        eta0 = int(state.rounds)
+        chosen = []
+        for lv in L:
+            # live-MAP decision (the fleet-sweep prediction rule), tuned
+            # §4.5 learning from the observed wait — as the scan hooks do
+            chosen.append(lv[int(np.argmax(np.asarray(state.log_p)))])
+            state, _ = asa.step(state, jnp.asarray(lv), g_one,
+                                policy="tuned")
+        r_adaptive = empirical_regret(np.asarray(chosen), L)
+        assert r_adaptive <= theorem1_bound(
+            len(chosen), 53, int(state.rounds) - eta0)
+        total_adaptive += r_adaptive
+        total_frozen += empirical_regret(L[:, a_frozen], L)
+    # learning while running beats the frozen cold-MAP predictor
+    assert total_adaptive <= total_frozen
 
 
 def test_stage_waits_and_fleet_learning():

@@ -1,0 +1,155 @@
+"""Property-based invariants of the xsim slotted engine.
+
+Hypothesis drives randomized small scenarios (random machine fill, random
+backlog/arrival mixes, every policy including ASA-Naive) through the
+event scan step by step, asserting the invariants the engine's masked
+array writes must never break:
+
+* core conservation — Σ cores(RUNNING) + free == total at every step,
+  and used cores never exceed capacity (min_free ≥ 0);
+* status-ladder monotonicity — INVALID→PENDING→QUEUED→RUNNING→DONE only
+  moves forward, except the two explicit ASA-Naive cancel edges
+  (RUNNING→CANCELLED at a mispredicted start, CANCELLED→QUEUED at the
+  resubmission);
+* causality — start ≥ submit for every started job;
+* estimator sanity — the in-scan ASA state stays a normalized
+  distribution (finite log_p, logsumexp ≈ 0).
+
+CI installs real ``hypothesis``; minimal environments fall back to the
+deterministic replay stub in conftest.py (same API surface).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bins import make_bins
+from repro.sched.workflows import BLAST, MONTAGE, STATISTICS
+from repro.xsim import events, policies
+from repro.xsim import state as X
+from repro.xsim.grid import XSimConfig, make_grid, run_grid
+from repro.xsim.state import add_job, empty_table, freeze
+
+MAX_JOBS = 24
+TOTAL = 64.0
+N_STEPS = 70
+BINS = jnp.asarray(make_bins(53), jnp.float32)
+
+# one jitted step for all examples (fixed shapes -> single compile)
+_step = jax.jit(lambda s: events.sim_step(s, BINS))
+
+POLICIES = (X.BIGJOB, X.PER_STAGE, X.ASA, X.ASA_NAIVE)
+WORKFLOWS = (STATISTICS, BLAST, MONTAGE)
+
+# forward edges of the ladder + the two explicit naive cancel edges
+_EDGES = {
+    (X.PENDING, X.QUEUED), (X.QUEUED, X.RUNNING), (X.RUNNING, X.DONE),
+    (X.RUNNING, X.CANCELLED),   # naive miss: cancel at start instant
+    (X.CANCELLED, X.QUEUED),    # naive resubmission re-enters the queue
+}
+# one sim_step can compose several edges at the same instant, but only in
+# the step's fixed order (releases → admissions → scheduling pass → cancel
+# hook): admit+start (P→R), admit+start+cancel (P/Q→C), resubmit+start
+# (C→R). A completion can never share a step with the same row's start
+# (durations are positive), so *→DONE composites stay impossible.
+_ALLOWED = _EDGES | {
+    (X.PENDING, X.RUNNING), (X.PENDING, X.CANCELLED),
+    (X.QUEUED, X.CANCELLED), (X.CANCELLED, X.RUNNING),
+}
+
+
+def _random_scenario(seed: int, policy_i: int, fill: float):
+    """A small random machine + backlog + one workflow, host-built."""
+    rng = np.random.default_rng(seed)
+    policy = POLICIES[policy_i % len(POLICIES)]
+    wf = WORKFLOWS[seed % len(WORKFLOWS)]
+    t = empty_table(MAX_JOBS)
+    row = 0
+    used = 0.0
+    for _ in range(int(rng.integers(0, 7))):          # warm-start running
+        c = float(rng.integers(1, 24))
+        if used + c > fill * TOTAL:
+            break
+        d = float(rng.uniform(50.0, 5000.0))
+        add_job(t, row, cores=c, duration=d, submit=0.0, status=X.RUNNING,
+                start=0.0, end=float(rng.uniform(1.0, d)))
+        used += c
+        row += 1
+    for _ in range(int(rng.integers(0, 6))):          # queued backlog
+        add_job(t, row, cores=float(rng.integers(1, 32)),
+                duration=float(rng.uniform(50.0, 5000.0)), submit=0.0,
+                status=X.QUEUED)
+        row += 1
+    for _ in range(int(rng.integers(0, 5))):          # future arrivals
+        add_job(t, row, cores=float(rng.integers(1, 32)),
+                duration=float(rng.uniform(50.0, 5000.0)),
+                submit=float(rng.uniform(1.0, 4000.0)), status=X.PENDING)
+        row += 1
+    t0 = float(rng.uniform(0.0, 2000.0))
+    policies.add_workflow(t, row, wf, 8, policy, t0=t0)
+    mode = "sample" if seed % 2 else "greedy"
+    return freeze(t, total_cores=TOTAL, free_cores=TOTAL - used,
+                  policy=policy, t0=t0, est_seed=seed, pred_mode=mode)
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(0, 3), st.floats(0.1, 0.95))
+def test_invariants_hold_at_every_step(seed, policy_i, fill):
+    s = _random_scenario(seed, policy_i, fill)
+    prev_status = np.asarray(s.status)
+    for _ in range(N_STEPS):
+        s = _step(s)
+        status = np.asarray(s.status)
+        cores = np.asarray(s.cores)
+        free = float(s.free)
+        # --- core conservation, never over capacity -------------------
+        used = float(np.sum(np.where(status == X.RUNNING, cores, 0.0)))
+        assert used + free == pytest.approx(float(s.total), abs=1e-3)
+        assert free >= -1e-3
+        assert float(s.min_free) >= -1e-3
+        # --- status ladder only moves along allowed edges -------------
+        for a, b in zip(prev_status, status):
+            if a != b:
+                assert (int(a), int(b)) in _ALLOWED, (int(a), int(b))
+        prev_status = status
+        # --- causality ------------------------------------------------
+        start = np.asarray(s.start)
+        submit = np.asarray(s.submit)
+        started = np.isfinite(start)
+        assert np.all(start[started] >= submit[started] - 1e-3)
+    # --- the in-scan estimator is still a normalized distribution -----
+    log_p = np.asarray(s.est.log_p)
+    assert np.all(np.isfinite(log_p))
+    assert abs(float(jax.nn.logsumexp(s.est.log_p))) < 1e-3
+
+
+_GRID_CFG = XSimConfig(n_warm=8, n_backlog=6, n_arrivals=8, max_stages=9,
+                       t0=1800.0)
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_grid_sweep_invariants(seed):
+    """Random full grids (all four policies) keep capacity + completion
+    invariants through the vmapped sweep."""
+    grid = make_grid(_GRID_CFG, n_seeds=1, shrink=1 / 128.0,
+                     workflows=("statistics",), policy_ids=(0, 1, 2, 3),
+                     seed=seed)
+    final, m = run_grid(grid)
+    assert float(jnp.min(final.min_free)) >= 0.0
+    running = np.asarray(final.status) == X.RUNNING
+    used = np.sum(np.where(running, np.asarray(final.cores), 0.0), axis=1)
+    np.testing.assert_allclose(used + np.asarray(final.free),
+                               np.asarray(final.total), rtol=1e-5)
+    # every scenario's workflow finished inside the static step budget
+    assert np.all(np.asarray(m["wf_done"]) == np.asarray(m["wf_total"]))
+    # OH only ever accrues on the naive policy
+    oh = np.asarray(m["oh_hours"])
+    pol = np.asarray(m["policy"])
+    assert np.all(oh[pol != X.ASA_NAIVE] == 0.0)
+    assert np.all(oh >= 0.0)
