@@ -1,0 +1,116 @@
+"""Train + evaluate the learned submission policy (repro.rl).
+
+Runs the REINFORCE recipe over vmapped xsim rollouts, then a held-out
+five-strategy comparison grid (BigJob / Per-Stage / ASA / ASA-Naive /
+learned head, greedy actions). Prints ``name,us_per_call,derived`` CSV
+rows (benchmarks/run.py convention) and — the CI ``rl-smoke`` contract —
+**exits non-zero unless the trained head improves on the init policy's
+held-out reward**. ``--json`` writes the reward curve + eval record (the
+artifact uploaded next to the bench-trajectory JSON).
+
+  python -m benchmarks.rl_train --smoke          # CI-sized: 3 iterations
+  python -m benchmarks.rl_train                  # full recipe (30 iters)
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+from repro.rl import train as rl_train
+from repro.xsim.grid import XSimConfig
+
+# CI-sized recipe: tiny tables, 3 REINFORCE iterations, a few seconds of
+# sweep per iteration — end-to-end train+eval well under 5 minutes on CPU.
+SMOKE = dict(iters=3, n_seeds=8, lr=0.5,
+             sim=XSimConfig(n_warm=16, n_backlog=12, n_arrivals=16,
+                            max_stages=9, t0=1800.0))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run: 3 iterations on a tiny grid")
+    ap.add_argument("--iters", type=int, default=None)
+    ap.add_argument("--lr", type=float, default=None)
+    ap.add_argument("--n-seeds", type=int, default=None,
+                    help="episodes per grid cell per training iteration")
+    ap.add_argument("--eval-seed", type=int, default=1234,
+                    help="held-out ScenarioGrid background seed")
+    ap.add_argument("--json", type=Path, default=None, metavar="PATH",
+                    help="write the reward-curve + eval record (CI "
+                         "artifact)")
+    args = ap.parse_args()
+
+    kw = dict(SMOKE) if args.smoke else {}
+    if args.iters is not None:
+        kw["iters"] = args.iters
+    if args.lr is not None:
+        kw["lr"] = args.lr
+    if args.n_seeds is not None:
+        kw["n_seeds"] = args.n_seeds
+    cfg = rl_train.TrainConfig(**kw)
+    if cfg.iters < 1:
+        ap.error("--iters must be >= 1")
+
+    t0 = time.time()
+    res = rl_train.train(cfg)
+    train_s = time.time() - t0
+
+    t0 = time.time()
+    fleet = rl_train.warmed_fleet(cfg, grid_seed=args.eval_seed)
+    ev = rl_train.evaluate(res.params, cfg, eval_seed=args.eval_seed,
+                           fleet=fleet)
+    ev0 = rl_train.evaluate(res.init_params, cfg, eval_seed=args.eval_seed,
+                            fleet=fleet)
+    eval_s = time.time() - t0
+
+    us_per_iter = train_s * 1e6 / max(cfg.iters, 1)
+    for strat, d in sorted(ev.items()):
+        print(f"rl_eval/{strat},0,twt_s={d['twt_s']:.0f};"
+              f"oh_hours={d['oh_hours']:.3f};reward={d['reward']:.3f};"
+              f"n={d['n']}")
+    improved = ev["rl"]["reward"] > ev0["rl"]["reward"]
+    vs_ps = ev["rl"]["twt_s"] <= ev["per_stage"]["twt_s"]
+    vs_asa = ev["rl"]["twt_s"] <= 1.15 * ev["asa"]["twt_s"]
+    print(f"rl_train/curve,{us_per_iter:.0f},"
+          f"iters={cfg.iters};first={res.rewards[0]:.3f};"
+          f"last={res.rewards[-1]:.3f};train_s={train_s:.1f};"
+          f"eval_s={eval_s:.1f};init_eval={ev0['rl']['reward']:.3f};"
+          f"trained_eval={ev['rl']['reward']:.3f};improved={improved};"
+          f"beats_per_stage={vs_ps};within_15pct_asa={vs_asa}")
+
+    if args.json is not None:
+        args.json.parent.mkdir(parents=True, exist_ok=True)
+        args.json.write_text(json.dumps({
+            "config": {"iters": cfg.iters, "lr": cfg.lr,
+                       "n_seeds": cfg.n_seeds, "hidden": cfg.hidden,
+                       "oh_weight": cfg.oh_weight, "seed": cfg.seed,
+                       "smoke": bool(args.smoke),
+                       "eval_seed": args.eval_seed},
+            "rewards": res.rewards,
+            "entropies": res.entropies,
+            "train_s": train_s,
+            "eval_s": eval_s,
+            "eval": ev,
+            "init_eval": ev0,
+            "checks": {"improved": improved, "beats_per_stage": vs_ps,
+                       "within_15pct_asa": vs_asa},
+        }, indent=2))
+
+    if not improved:
+        sys.exit("rl_train: trained policy did not improve on the init "
+                 f"policy's held-out reward ({ev['rl']['reward']:.3f} vs "
+                 f"{ev0['rl']['reward']:.3f})")
+    if not (vs_ps and vs_asa):
+        sys.exit("rl_train: acceptance comparison failed "
+                 f"(rl={ev['rl']['twt_s']:.0f}s, "
+                 f"per_stage={ev['per_stage']['twt_s']:.0f}s, "
+                 f"asa={ev['asa']['twt_s']:.0f}s)")
+
+
+if __name__ == "__main__":
+    main()

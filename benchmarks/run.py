@@ -7,6 +7,9 @@ before jax init); this driver summarizes its JSON output if present.
 ``--engine event`` (default) drives the discrete-event QueueSim campaign;
 ``--engine xsim`` runs the same strategy comparison on the vectorized
 fleet engine (repro.xsim) — thousands of scenarios in one jitted program.
+``--policy`` (xsim only; validated up front against ENGINE_POLICIES)
+adds the §4.5 ASA-Naive variant or the trained repro.rl learned head to
+the sweep.
 """
 
 from __future__ import annotations
@@ -53,12 +56,15 @@ def dryrun_summary() -> None:
     print(f"dryrun/all_cells,0,ok={ok};fail={fail};skip={skip}")
 
 
-def xsim_main(n_seeds: int = 4, include_naive: bool = False) -> None:
+def xsim_main(n_seeds: int = 4, include_naive: bool = False,
+              include_rl: bool = False) -> None:
     """Strategy comparison on the batched engine + its throughput row.
 
     ``include_naive`` adds the §4.5 ASA-Naive (cancel/resubmit) policy to
     the sweep; its row carries the over-allocation OH the dependency-free
-    variant pays for mispredictions.
+    variant pays for mispredictions. ``include_rl`` first trains the
+    learned submission-policy head (the benchmarks.rl_train smoke recipe)
+    and adds it to the sweep as policy id 4 (greedy actions).
     """
     import time
 
@@ -66,19 +72,27 @@ def xsim_main(n_seeds: int = 4, include_naive: bool = False) -> None:
 
     from repro.xsim import policies
     from repro.xsim.grid import XSimConfig, make_grid, run_grid, warm_fleet
-    from repro.xsim.state import ASA, ASA_NAIVE, BIGJOB, PER_STAGE
+    from repro.xsim.state import ASA, ASA_NAIVE, BIGJOB, PER_STAGE, RL
 
     cfg = XSimConfig(n_warm=24, n_backlog=16, n_arrivals=24, max_stages=9,
                      t0=3600.0)
     policy_ids = (BIGJOB, PER_STAGE, ASA)
     if include_naive:
         policy_ids += (ASA_NAIVE,)
+    params = None
+    if include_rl:
+        from benchmarks.rl_train import SMOKE
+        from repro.rl import train as rl_train
+
+        policy_ids += (RL,)
+        params = rl_train.train(rl_train.TrainConfig(**SMOKE)).params
     grid = make_grid(cfg, n_seeds=n_seeds, shrink=1 / 64.0,
                      policy_ids=policy_ids)
     fleet = policies.init_fleet(int(grid.geo_idx.max()) + 1)
-    fleet = warm_fleet(fleet, grid, rounds=3)
+    fleet = warm_fleet(fleet, grid, rounds=3, params=params)
     t0 = time.time()
-    _, m = run_grid(grid, fleet, pred_seed=7)
+    _, m = run_grid(grid, fleet, pred_seed=7, params=params,
+                    rl_mode="greedy")
     elapsed = time.time() - t0
     m = {k: np.asarray(v) for k, v in m.items()}
 
@@ -133,14 +147,37 @@ def main() -> None:
     roofline_summary()
 
 
+# extra policies each engine understands; validated up front so a bad
+# combination fails at the command line, not deep inside a jitted sweep
+ENGINE_POLICIES = {
+    "event": (),
+    "xsim": ("asa-naive", "rl"),
+}
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
-    ap.add_argument("--engine", choices=("event", "xsim"), default="event")
-    ap.add_argument("--policy", choices=("asa-naive",), default=None,
+    ap.add_argument("--engine", choices=tuple(ENGINE_POLICIES),
+                    default="event")
+    ap.add_argument("--policy",
+                    choices=sorted({p for ps in ENGINE_POLICIES.values()
+                                    for p in ps}),
+                    default=None,
                     help="asa-naive: include the §4.5 cancel/resubmit "
-                         "variant in the xsim strategy sweep")
+                         "variant in the xsim strategy sweep; rl: train "
+                         "the repro.rl smoke recipe and include the "
+                         "learned head (both xsim-only)")
     args = ap.parse_args()
+    if args.policy is not None and args.policy not in \
+            ENGINE_POLICIES[args.engine]:
+        valid = " or ".join(
+            f"--engine {e} --policy {p}"
+            for e, ps in ENGINE_POLICIES.items() for p in ps) or "none"
+        ap.error(
+            f"--policy {args.policy} is not supported by --engine "
+            f"{args.engine} (the event engine takes no --policy; valid "
+            f"combinations: {valid})")
     if args.engine == "xsim":
-        xsim_main(include_naive=args.policy == "asa-naive")
+        xsim_main(include_naive=args.policy == "asa-naive",
+                  include_rl=args.policy == "rl")
     else:
         main()

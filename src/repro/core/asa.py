@@ -140,6 +140,20 @@ def map_wait(state: ASAState, bins: jax.Array) -> jax.Array:
     return bins[jnp.argmax(state.log_p)]
 
 
+def posterior_features(state: ASAState, bins: jax.Array) -> jax.Array:
+    """Summary of the live posterior as policy-head observation inputs.
+
+    Returns ``[map_wait, expected_wait, entropy]`` — the greedy estimate,
+    the posterior mean, and the Shannon entropy of p (how much Algorithm 1
+    still hedges). All three are jit/vmap/scan-safe reads of the state;
+    ``repro.rl.features`` feeds them to the learned submission policy.
+    """
+    p = jnp.exp(state.log_p)
+    entropy = -jnp.sum(p * state.log_p)
+    b = bins.astype(jnp.float32)
+    return jnp.stack([map_wait(state, b), expected_wait(state, b), entropy])
+
+
 # ---------------------------------------------------------------------------
 # Convenience single-step drivers (used by lax.scan simulations and the
 # campaign scheduler).  The 0/1 loss of eq. (3) lives in losses.py; these

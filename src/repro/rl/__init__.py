@@ -1,0 +1,31 @@
+"""repro.rl — learned submission-policy head trained on vmapped xsim
+rollouts.
+
+ASA's §4 estimator learns *queue waits*; the submission policy that
+consumes them stays hand-designed (BigJob / Per-Stage / ASA / ASA-Naive).
+This package adds the next rung: a small MLP head that maps a jit-safe
+observation of the scenario (queue state + the live Algorithm-1
+posterior) to a distribution over the §4.3 wait bins, acting as the
+submit-lead-time inside the batched ``repro.xsim`` engine (policy id 4).
+The vmapped sweep is the experience generator — thousands of independent
+scheduling episodes per jitted call — and training is REINFORCE with a
+batch baseline over resampled scenario grids. See README.md.
+"""
+
+from repro.rl.features import FEATURE_NAMES, N_FEATURES, observe
+from repro.rl.policy import (PolicyParams, act_greedy, act_sample,
+                             init_params, log_prob, logits)
+from repro.rl.rollout import Trajectory, collect, episode_rewards
+from repro.rl.train import TrainConfig, TrainResult
+
+# NOTE: the train()/evaluate() entry points live in repro.rl.train and are
+# deliberately NOT re-exported here — a package attribute named `train`
+# would shadow the submodule of the same name.
+
+__all__ = [
+    "FEATURE_NAMES", "N_FEATURES", "observe",
+    "PolicyParams", "act_greedy", "act_sample", "init_params", "log_prob",
+    "logits",
+    "Trajectory", "collect", "episode_rewards",
+    "TrainConfig", "TrainResult",
+]

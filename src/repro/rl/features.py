@@ -1,0 +1,78 @@
+"""Jit-safe observation featurizer for the learned submission policy.
+
+``observe`` reads one stage's slice of a ``ScenarioState`` — plus the
+scenario's live ``core.asa.ASAState`` posterior — into a fixed
+``(N_FEATURES,)`` vector, inside the event scan (it is called from the
+``events._chain_hook`` RL branch at the same instants ASA would sample a
+wait estimate). Everything is pure indexing/reduction, so the whole
+feature pipeline vmaps across the fleet.
+
+Times and durations are log-compressed to the §4.3 wait-bin range
+(``log1p(x)/log1p(1e5)``), fractions are already in [0, 1], and the
+posterior entropy is normalized by ``log m`` — every feature lands in
+O(1) so the MLP head needs no input whitening.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import asa
+from repro.core.bins import MAX_WAIT_SECONDS
+from repro.xsim.state import QUEUED, RL_FEATURES, RUNNING, ScenarioState
+
+N_FEATURES = RL_FEATURES  # the constant lives in xsim.state (import cycle)
+
+FEATURE_NAMES = (
+    "bias",              # constant 1
+    "free_frac",         # free cores / machine size
+    "queue_depth",       # queued jobs / table size
+    "queued_work",       # queued core demand / machine size (capped at 4x)
+    "running_frac",      # running jobs / table size
+    "stage_cores",       # this stage's width / machine size
+    "stage_duration",    # log1p(t_y) / log1p(1e5)
+    "stage_index",       # y / max_stages
+    "pred_eta",          # log1p(max(E_prev - now, 0)) / log1p(1e5)
+    "map_wait",          # log1p(posterior MAP wait) / log1p(1e5)
+    "expected_wait",     # log1p(posterior mean wait) / log1p(1e5)
+    "entropy",           # posterior entropy / log m
+)
+assert len(FEATURE_NAMES) == N_FEATURES
+
+_LOG_SCALE = float(jnp.log1p(MAX_WAIT_SECONDS))
+
+
+def _logt(x: jax.Array) -> jax.Array:
+    """Compress a nonnegative time/duration to ~[0, 1]."""
+    return jnp.log1p(jnp.maximum(x, 0.0)) / _LOG_SCALE
+
+
+def observe(s: ScenarioState, stage: jax.Array, row: jax.Array,
+            pred_ee: jax.Array, now: jax.Array,
+            bins: jax.Array) -> jax.Array:
+    """Featurize stage ``stage`` (job-table row ``row``) at time ``now``.
+
+    ``pred_ee`` is the predecessor chain's expected end E_{y-1} (-inf for
+    stage 0 — the time-to-predecessor feature then reads 0). ``row`` must
+    be pre-clipped to the table.
+    """
+    queued = s.status == QUEUED
+    running = s.status == RUNNING
+    n = jnp.float32(s.status.shape[0])
+    m = s.est.log_p.shape[-1]
+    post = asa.posterior_features(s.est, bins)
+    return jnp.stack([
+        jnp.float32(1.0),
+        s.free / s.total,
+        jnp.sum(queued) / n,
+        jnp.minimum(jnp.sum(jnp.where(queued, s.cores, 0.0)) / s.total, 4.0),
+        jnp.sum(running) / n,
+        s.cores[row] / s.total,
+        _logt(s.duration[row]),
+        stage.astype(jnp.float32) / s.wf_rows.shape[0],
+        _logt(pred_ee - now),
+        _logt(post[0]),
+        _logt(post[1]),
+        post[2] / jnp.log(jnp.float32(m)),
+    ])

@@ -1,0 +1,74 @@
+"""The learned submission-policy head: a small pure-jax MLP.
+
+Maps an ``(N_FEATURES,)`` observation (features.py) to logits over the m
+§4.3 wait bins; the sampled/greedy bin value is the stage's
+submit-lead-time a_y, consumed by the xsim §3.2 cascade exactly where
+ASA's estimator draw would be (``events._chain_hook``, policy id 4).
+
+Parameters are a NamedTuple pytree — they thread through ``jax.jit`` /
+``jax.vmap`` / ``jax.grad`` untouched and broadcast across the fleet as a
+closed-over constant of the batched sweep.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.rl.features import N_FEATURES
+from repro.xsim.state import M_BINS
+
+HIDDEN_DEFAULT = 32
+
+
+class PolicyParams(NamedTuple):
+    """MLP weights: obs -> tanh hidden -> wait-bin logits."""
+
+    w1: jax.Array  # (n_features, hidden)
+    b1: jax.Array  # (hidden,)
+    w2: jax.Array  # (hidden, m)
+    b2: jax.Array  # (m,)
+
+
+def init_params(key: jax.Array, n_features: int = N_FEATURES,
+                hidden: int = HIDDEN_DEFAULT, m: int = M_BINS,
+                scale: float = 0.1) -> PolicyParams:
+    """Small-random init; the zero output bias starts the head near the
+    uniform distribution over bins (maximum-entropy exploration)."""
+    k1, k2 = jax.random.split(key)
+    return PolicyParams(
+        w1=scale * jax.random.normal(k1, (n_features, hidden), jnp.float32),
+        b1=jnp.zeros(hidden, jnp.float32),
+        w2=scale * jax.random.normal(k2, (hidden, m), jnp.float32),
+        b2=jnp.zeros(m, jnp.float32),
+    )
+
+
+def n_params(params: PolicyParams) -> int:
+    return sum(int(p.size) for p in params)
+
+
+def logits(params: PolicyParams, obs: jax.Array) -> jax.Array:
+    """(.., n_features) observations -> (.., m) wait-bin logits."""
+    h = jnp.tanh(obs @ params.w1 + params.b1)
+    return h @ params.w2 + params.b2
+
+
+def act_sample(params: PolicyParams, obs: jax.Array,
+               key: jax.Array) -> jax.Array:
+    """Stochastic action (training rollouts): a ~ softmax(logits)."""
+    return jax.random.categorical(key, logits(params, obs))
+
+
+def act_greedy(params: PolicyParams, obs: jax.Array) -> jax.Array:
+    """Deterministic action (evaluation): argmax of the logits."""
+    return jnp.argmax(logits(params, obs), axis=-1)
+
+
+def log_prob(params: PolicyParams, obs: jax.Array,
+             action: jax.Array) -> jax.Array:
+    """log pi(action | obs) for (.., n_features) obs and (..,) actions."""
+    lp = jax.nn.log_softmax(logits(params, obs), axis=-1)
+    return jnp.take_along_axis(lp, action[..., None], axis=-1)[..., 0]

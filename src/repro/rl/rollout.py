@@ -1,0 +1,72 @@
+"""Batched episode collection on the vmapped xsim engine.
+
+One ``collect`` call runs a whole ``ScenarioGrid`` of learned-policy
+scenarios as a single jitted ``vmap(lax.scan)`` sweep (policy id 4 in
+``xsim.events``) and reads the trajectory back out of the final states:
+the chain hook recorded every observation/action pair into the
+``rl_obs``/``rl_act`` buffers, so the rollout needs no python-side
+stepping — thousands of scheduling episodes per call, exactly the
+experience generator the vmapped sweep was built to be.
+
+The per-scenario reward mirrors ``compare.metrics``: the negative
+perceived inter-stage waiting time (hours) minus an over-allocation
+penalty on the OH core-hours the no-dependency world charges for early
+starts (idle holds and cancel latencies). Maximizing it is the §4.5
+trade-off ASA navigates with its estimator — here the policy head must
+learn it from returns alone.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.xsim.grid import ScenarioGrid, run_grid
+from repro.xsim.state import ScenarioState
+
+# One wasted core-hour costs as much reward as one hour of perceived
+# wait — the same exchange rate compare.metrics' core_hours column uses
+# when it folds oh_hours into the total.
+OH_WEIGHT_DEFAULT = 1.0
+
+
+class Trajectory(NamedTuple):
+    """REINFORCE batch: (B, S, F) obs, (B, S) actions, (B,) rewards.
+
+    ``act == -1`` marks unused stage slots (shorter workflows, or stages
+    the step budget never admitted); mask with ``act >= 0``.
+    """
+
+    obs: jax.Array
+    act: jax.Array
+    reward: jax.Array
+
+
+def episode_rewards(metrics: dict[str, jax.Array],
+                    oh_weight: float = OH_WEIGHT_DEFAULT) -> jax.Array:
+    """(B,) rewards from a batched metrics dict (higher is better)."""
+    return -(metrics["twt_s"] / 3600.0 + oh_weight * metrics["oh_hours"])
+
+
+def trajectory(final: ScenarioState, metrics: dict[str, jax.Array],
+               oh_weight: float = OH_WEIGHT_DEFAULT) -> Trajectory:
+    """Read the recorded (obs, act, reward) batch out of a finished sweep."""
+    return Trajectory(obs=final.rl_obs, act=final.rl_act,
+                      reward=episode_rewards(metrics, oh_weight))
+
+
+def collect(grid: ScenarioGrid, params, fleet=None, *, pred_seed: int = 1,
+            rl_mode: str = "sample", oh_weight: float = OH_WEIGHT_DEFAULT,
+            freed_mode: str = "ref"):
+    """Run the grid under ``params`` and return (final, metrics, traj).
+
+    ``rl_mode="sample"`` draws stochastic actions (training);
+    ``"greedy"`` takes the argmax bin (evaluation). ``pred_seed``
+    decorrelates the per-scenario action streams between iterations.
+    """
+    final, m = run_grid(grid, fleet, pred_seed=pred_seed,
+                        freed_mode=freed_mode, params=params,
+                        rl_mode=rl_mode)
+    return final, m, trajectory(final, m, oh_weight)

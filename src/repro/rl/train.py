@@ -1,0 +1,163 @@
+"""REINFORCE-with-baseline training for the submission-policy head.
+
+Plain SGD, no optimizer library: per iteration a fresh ``ScenarioGrid``
+resample (new background draws, same cell structure → the jitted sweep
+recompiles nothing) is rolled out with stochastic actions, the batch-mean
+reward is the baseline, advantages are normalized, and the policy
+gradient
+
+    ∇ E[R] ≈ mean_b [ Â_b · Σ_y ∇ log π(a_by | o_by) ]
+
+is taken through a *replayed* log-prob pass over the recorded
+``(obs, act)`` buffers — the environment scan itself is never
+differentiated (actions are discrete; REINFORCE needs no env gradients),
+so the update is a tiny dense computation regardless of simulator depth.
+
+``evaluate`` reruns a held-out grid with all five strategies (BigJob /
+Per-Stage / ASA / ASA-Naive / the learned head, greedy actions) on
+identical per-seed machines, the Table-1 comparison setting.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.rl import policy as P
+from repro.rl import rollout
+from repro.xsim.grid import XSimConfig, make_grid, warm_fleet
+from repro.xsim.state import ASA, ASA_NAIVE, BIGJOB, PER_STAGE, RL
+from repro.xsim import policies as xpolicies
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    """Knobs for one training run (defaults: the full 30-iteration
+    recipe; the CI smoke recipe is ``benchmarks.rl_train.SMOKE``)."""
+
+    iters: int = 30
+    lr: float = 0.3
+    n_seeds: int = 8            # episodes per cell per iteration
+    hidden: int = P.HIDDEN_DEFAULT
+    seed: int = 0
+    oh_weight: float = rollout.OH_WEIGHT_DEFAULT
+    warm_rounds: int = 3        # §4.3 estimator warm-up before training
+    center_names: Sequence[str] = ("hpc2n", "uppmax")
+    workflows: Sequence[str] = ("montage", "blast", "statistics")
+    shrink: float = 1.0 / 64.0
+    sim: XSimConfig = field(default_factory=lambda: XSimConfig(
+        n_warm=24, n_backlog=16, n_arrivals=24, max_stages=9, t0=3600.0))
+
+
+@dataclass
+class TrainResult:
+    params: P.PolicyParams
+    init_params: P.PolicyParams
+    rewards: list[float]        # batch-mean reward per iteration
+    entropies: list[float]      # mean action entropy per iteration (nats)
+
+
+def _surrogate(params: P.PolicyParams, obs, act, adv) -> jax.Array:
+    """-mean_b( Â_b · Σ_y log π(a_by|o_by) ); act == -1 slots masked."""
+    mask = act >= 0
+    lp = P.log_prob(params, obs, jnp.maximum(act, 0))
+    per_ep = jnp.sum(jnp.where(mask, lp, 0.0), axis=-1)
+    return -jnp.mean(adv * per_ep)
+
+
+@functools.partial(jax.jit, static_argnames=("lr",))
+def reinforce_step(params: P.PolicyParams, obs, act, reward,
+                   lr: float) -> tuple[P.PolicyParams, jax.Array]:
+    """One SGD step on the REINFORCE surrogate; returns (params, entropy).
+
+    The baseline is the batch-mean reward; advantages are normalized to
+    unit variance so ``lr`` is scale-free across reward regimes.
+    """
+    adv = reward - jnp.mean(reward)
+    adv = adv / (jnp.std(adv) + 1e-6)
+    grads = jax.grad(_surrogate)(params, obs, act, adv)
+    new = jax.tree.map(lambda p, g: p - lr * g, params, grads)
+    # mean policy entropy over the visited observations (diagnostics)
+    lp = jax.nn.log_softmax(P.logits(params, obs), axis=-1)
+    ent = -jnp.sum(jnp.exp(lp) * lp, axis=-1)
+    mask = act >= 0
+    ent = jnp.sum(jnp.where(mask, ent, 0.0)) / jnp.maximum(
+        jnp.sum(mask), 1)
+    return new, ent
+
+
+def warmed_fleet(cfg: TrainConfig, grid_seed: int):
+    """A §4.3-warmed per-geometry estimator fleet (the policy head reads
+    the live posterior as features, so training starts from the same
+    informed state the hand-designed ASA enjoys)."""
+    warm_grid = make_grid(cfg.sim, cfg.center_names, cfg.workflows,
+                          policy_ids=(PER_STAGE, ASA), n_seeds=2,
+                          shrink=cfg.shrink, seed=grid_seed)
+    fleet = xpolicies.init_fleet(int(warm_grid.geo_idx.max()) + 1)
+    return warm_fleet(fleet, warm_grid, rounds=cfg.warm_rounds)
+
+
+def train(cfg: TrainConfig = TrainConfig()) -> TrainResult:
+    """REINFORCE over ``cfg.iters`` grid resamples; returns the curve."""
+    key = jax.random.PRNGKey(cfg.seed)
+    params = init_params = P.init_params(key, hidden=cfg.hidden)
+    fleet = warmed_fleet(cfg, grid_seed=cfg.seed)
+
+    rewards: list[float] = []
+    entropies: list[float] = []
+    for i in range(cfg.iters):
+        grid = make_grid(cfg.sim, cfg.center_names, cfg.workflows,
+                         policy_ids=(RL,), n_seeds=cfg.n_seeds,
+                         shrink=cfg.shrink, seed=cfg.seed * 10_000 + i + 1)
+        _, _, traj = rollout.collect(grid, params, fleet,
+                                     pred_seed=i + 1, rl_mode="sample",
+                                     oh_weight=cfg.oh_weight)
+        rewards.append(float(jnp.mean(traj.reward)))
+        params, ent = reinforce_step(params, traj.obs, traj.act,
+                                     traj.reward, cfg.lr)
+        entropies.append(float(ent))
+    return TrainResult(params=params, init_params=init_params,
+                       rewards=rewards, entropies=entropies)
+
+
+def evaluate(params: P.PolicyParams, cfg: TrainConfig = TrainConfig(), *,
+             eval_seed: int = 777, n_seeds: int = 8,
+             oh_weight: float | None = None,
+             fleet=None) -> dict[str, dict[str, float]]:
+    """Held-out strategy comparison: all five policies, greedy actions.
+
+    ``eval_seed`` keys background draws never seen in training (train
+    grids use ``cfg.seed·10000 + i + 1``). ``fleet`` lets callers reuse
+    one ``warmed_fleet(cfg, grid_seed=eval_seed)`` across evaluations of
+    several heads on the same held-out grid (warming costs
+    ``cfg.warm_rounds`` full sweeps). Returns
+    ``{strategy: {twt_s, makespan_s, core_hours, oh_hours, reward,
+    n}}`` means over the grid.
+    """
+    w = cfg.oh_weight if oh_weight is None else oh_weight
+    if fleet is None:
+        fleet = warmed_fleet(cfg, grid_seed=eval_seed)
+    grid = make_grid(cfg.sim, cfg.center_names, cfg.workflows,
+                     policy_ids=(BIGJOB, PER_STAGE, ASA, ASA_NAIVE, RL),
+                     n_seeds=n_seeds, shrink=cfg.shrink, seed=eval_seed)
+    _, m, traj = rollout.collect(grid, params, fleet, pred_seed=eval_seed,
+                                 rl_mode="greedy", oh_weight=w)
+    reward = np.asarray(traj.reward)
+    m = {k: np.asarray(v) for k, v in m.items()}
+
+    by: dict[str, list[int]] = {}
+    for i, lab in enumerate(grid.labels):
+        by.setdefault(lab["strategy"], []).append(i)
+    out: dict[str, dict[str, float]] = {}
+    for strat, idx in sorted(by.items()):
+        out[strat] = {k: float(np.mean(m[k][idx]))
+                      for k in ("twt_s", "makespan_s", "core_hours",
+                                "oh_hours")}
+        out[strat]["reward"] = float(np.mean(reward[idx]))
+        out[strat]["n"] = len(idx)
+    return out

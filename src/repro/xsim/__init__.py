@@ -9,7 +9,7 @@ design and its approximations.
 """
 
 from repro.xsim.state import (ASA, ASA_NAIVE, BIGJOB, CANCELLED, PER_STAGE,
-                              POLICY_NAMES, ScenarioState)
+                              POLICY_NAMES, RL, ScenarioState)
 from repro.xsim.events import simulate, sweep
 from repro.xsim.grid import (ScenarioGrid, XSimConfig, center_params,
                              make_grid, run_grid)
@@ -17,6 +17,6 @@ from repro.xsim.compare import batched_metrics, metrics
 
 __all__ = [
     "ASA", "ASA_NAIVE", "BIGJOB", "CANCELLED", "PER_STAGE", "POLICY_NAMES",
-    "ScenarioState", "simulate", "sweep", "ScenarioGrid", "XSimConfig",
+    "RL", "ScenarioState", "simulate", "sweep", "ScenarioGrid", "XSimConfig",
     "center_params", "make_grid", "run_grid", "batched_metrics", "metrics",
 ]

@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.xsim.state import (ASA, ASA_NAIVE, DONE, QUEUED, RUNNING,
+from repro.xsim.state import (ASA, ASA_NAIVE, DONE, QUEUED, RL, RUNNING,
                               ScenarioState, empty_table)
 
 
@@ -22,11 +22,12 @@ def metrics(s: ScenarioState) -> dict[str, jax.Array]:
     """Per-scenario scalars (vmap over a batched state for fleet metrics).
 
     twt_s is policy-aware: BigJob = the single job's wait, Per-Stage =
-    Σ stage waits, ASA / ASA-Naive = *perceived* waits along the stage
-    chain (stage 0's full wait, then the part of each stage's wait not
-    hidden behind its predecessor's logical end, which includes any naive
-    idle hold) — matching ``sched.strategies.run_asa``'s settled-timeline
-    bookkeeping exactly. oh_hours carries the naive over-allocation.
+    Σ stage waits, ASA / ASA-Naive / the learned policy = *perceived*
+    waits along the stage chain (stage 0's full wait, then the part of
+    each stage's wait not hidden behind its predecessor's logical end,
+    which includes any naive idle hold) — matching
+    ``sched.strategies.run_asa``'s settled-timeline bookkeeping exactly.
+    oh_hours carries the naive/RL over-allocation.
     """
     n = s.status.shape[0]
     wf = s.is_wf
@@ -57,7 +58,8 @@ def metrics(s: ScenarioState) -> dict[str, jax.Array]:
         0, s.wf_rows.shape[0], chain,
         (jnp.float32(-jnp.inf), jnp.float32(0.0)))
 
-    asa_like = (s.policy == ASA) | (s.policy == ASA_NAIVE)
+    asa_like = ((s.policy == ASA) | (s.policy == ASA_NAIVE)
+                | (s.policy == RL))
     twt = jnp.where(asa_like, chain_twt, wait_sum)
 
     wf_end = jnp.max(jnp.where(wf, s.end, -jnp.inf))

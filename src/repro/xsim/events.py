@@ -33,6 +33,12 @@ per-event dataflow):
   OH core-seconds) or is CANCELLED and resubmitted once the predecessor
   completes (long gaps), charging the cancel latency as OH — mirroring
   ``strategies.run_asa(use_dependencies=False)``.
+* Learned policy (``repro.rl``, policy id 4): same hooks as ASA-Naive
+  (no-dependency world, estimator still learning), but the chain hook's
+  wait estimates come from an MLP head over the same wait bins when a
+  ``params`` pytree is threaded through the sweep — observations and
+  chosen bins are recorded into the ``rl_obs``/``rl_act`` replay
+  buffers. ``params=None`` statically elides the branch.
 
 The start/chain hooks process ONE pending stage per scan step (estimator
 updates are inherently sequential: each consumes PRNG state); when more
@@ -55,11 +61,20 @@ from repro.sched.strategies import (NAIVE_CANCEL_LATENCY_S,
                                     NAIVE_IDLE_THRESHOLD_S)
 from repro.xsim import backfill
 from repro.xsim.state import (ASA, ASA_NAIVE, CANCELLED, DONE, PENDING,
-                              PER_STAGE, QUEUED, RUNNING, ScenarioState)
+                              PER_STAGE, QUEUED, RL, RUNNING, ScenarioState)
 
 
 def _asa_like(s: ScenarioState) -> jax.Array:
-    return (s.policy == ASA) | (s.policy == ASA_NAIVE)
+    """Policies that run the cascade hooks (chain + start + estimator)."""
+    return (s.policy == ASA) | (s.policy == ASA_NAIVE) | (s.policy == RL)
+
+
+def _naive_like(s: ScenarioState) -> jax.Array:
+    """Policies without dependency support: early allocations idle or are
+    cancelled/resubmitted (§4.5). The learned policy (repro.rl) lives in
+    this world — the over-allocation OH is what makes its
+    submit-lead-time problem non-degenerate."""
+    return (s.policy == ASA_NAIVE) | (s.policy == RL)
 
 
 def next_event_time(s: ScenarioState, naive: bool = True) -> jax.Array:
@@ -108,7 +123,7 @@ def _release_naive_resubmit(s: ScenarioState, newly_done, now
     """Stage y DONE ⇒ a CANCELLED successor is resubmitted now (§4.5)."""
     n = s.status.shape[0]
     succ_c = jnp.clip(s.wf_next, 0, n - 1)
-    fire = (newly_done & s.is_wf & (s.policy == ASA_NAIVE)
+    fire = (newly_done & s.is_wf & _naive_like(s)
             & (s.wf_next >= 0) & (s.status[succ_c] == CANCELLED))
     succ = jnp.where(fire, s.wf_next, n)
     submit = s.submit.at[succ].set(now, mode="drop")
@@ -157,7 +172,7 @@ def _start_hook(s: ScenarioState, now, bins, naive: bool) -> ScenarioState:
                   jnp.where(prev_cancelled,
                             s.canc_start[yp] + s.duration[pc], jnp.inf)))
     early = prev_logical - now
-    is_early = any_p & (s.policy == ASA_NAIVE) & (early > 0.0)
+    is_early = any_p & _naive_like(s) & (early > 0.0)
     do_cancel = is_early & (early > NAIVE_IDLE_THRESHOLD_S)
     do_hold = is_early & ~do_cancel
     do_learn = any_p & ~do_cancel
@@ -189,12 +204,22 @@ def _start_hook(s: ScenarioState, now, bins, naive: bool) -> ScenarioState:
     )
 
 
-def _chain_hook(s: ScenarioState, now, bins, greedy) -> ScenarioState:
+def _chain_hook(s: ScenarioState, now, bins, greedy, params=None,
+                rl_mode: str = "sample") -> ScenarioState:
     """Process ONE pending stage admission: live-sample the §3.2 cascade.
 
     Stage y first admitted at s_y ⇒ (stage 0 only) sample a_0, fix
     E_y = max(s_y + a_y, E_{y-1}) + t_y, sample the successor's a_{y+1}
     from the live estimator and schedule it for max(now, E_y − a_{y+1}).
+
+    ``params`` (a ``repro.rl.policy.PolicyParams`` pytree, or None)
+    enables the learned-policy branch: scenarios with policy id 4 draw
+    a_0/a_{y+1} from the MLP head over the same wait bins — observations
+    and chosen bins are recorded into ``rl_obs``/``rl_act`` (the
+    REINFORCE replay buffer) — while ASA scenarios in the same batch keep
+    the estimator draw. ``params=None`` (static) elides the branch
+    entirely: the pre-RL trace, bit for bit. ``rl_mode`` picks stochastic
+    (training) vs argmax (evaluation) actions, statically.
     """
     n = s.status.shape[0]
     pending = s.chain_pending
@@ -205,30 +230,79 @@ def _chain_hook(s: ScenarioState, now, bins, greedy) -> ScenarioState:
     # stage 0 samples its own wait estimate at submission (later stages
     # were sampled at their predecessor's admission, below)
     need_a0 = any_p & (y == 0)
-    if greedy is True:
-        # static greedy: both draws read the same (unchanged) MAP — one
-        # argmax serves a0 and a1, and no PRNG is traced at all
-        w_map = asa.map_wait(s.est, bins.astype(jnp.float32))
-        est, a0 = s.est, jnp.where(need_a0, w_map, 0.0)
-    else:
-        est, a0 = asa.sample_wait_if(s.est, bins, need_a0, greedy)
-    pw_row = jnp.where(need_a0, a0, s.pred_wait[row])
-
     prev_row = jnp.where(y > 0, s.wf_rows[jnp.maximum(y - 1, 0)], -1)
     pc = jnp.clip(prev_row, 0, n - 1)
     prev_ee = jnp.where(prev_row < 0, -jnp.inf, s.expected_end[pc])
-    # `now` IS the admission instant (events never skip a pending submit;
-    # repass steps hold time still); the stage's own submit entry may
-    # already have been rewritten by a same-instant naive cancel
-    ee = jnp.maximum(now + pw_row, prev_ee) + s.duration[row]
-
     succ = s.wf_next[row]
     sc = jnp.clip(succ, 0, n - 1)
     has_succ = any_p & (succ >= 0)
-    if greedy is True:
-        a1 = jnp.where(has_succ, w_map, 0.0)
-    else:
+
+    def cascade_ee(s: ScenarioState, a0):
+        """Stage y's settled a_y and expected end E_y for a given a_0.
+
+        `now` IS the admission instant (events never skip a pending
+        submit; repass steps hold time still); the stage's own submit
+        entry may already have been rewritten by a same-instant naive
+        cancel."""
+        pw_row = jnp.where(need_a0, a0, s.pred_wait[row])
+        return pw_row, jnp.maximum(now + pw_row, prev_ee) + s.duration[row]
+
+    def asa_draws(s: ScenarioState):
+        if greedy is True:
+            # static greedy: both draws read the same (unchanged) MAP —
+            # one argmax serves a0 and a1, and no PRNG is traced at all
+            w_map = asa.map_wait(s.est, bins.astype(jnp.float32))
+            return (s.est, jnp.where(need_a0, w_map, 0.0),
+                    jnp.where(has_succ, w_map, 0.0))
+        est, a0 = asa.sample_wait_if(s.est, bins, need_a0, greedy)
         est, a1 = asa.sample_wait_if(est, bins, has_succ, greedy)
+        return est, a0, a1
+
+    if params is None:
+        est, a0, a1 = asa_draws(s)
+    else:
+        # trace-time import: repro.rl depends on xsim.grid → xsim.events,
+        # so a module-level import here would be a cycle
+        from repro.rl import features as rl_features
+        from repro.rl import policy as rl_policy
+
+        def rl_draws(s: ScenarioState):
+            est = s.est
+            if rl_mode == "sample":
+                key, k0, k1 = jax.random.split(est.key, 3)
+                est = est._replace(key=key)
+            obs0 = rl_features.observe(s, y, row, prev_ee, now, bins)
+            i0 = (rl_policy.act_greedy(params, obs0)
+                  if rl_mode == "greedy"
+                  else rl_policy.act_sample(params, obs0, k0))
+            i0 = i0.astype(jnp.int32)
+            a0 = jnp.where(need_a0, bins[i0], 0.0)
+            _, ee = cascade_ee(s, a0)
+            obs1 = rl_features.observe(s, y + 1, sc, ee, now, bins)
+            i1 = (rl_policy.act_greedy(params, obs1)
+                  if rl_mode == "greedy"
+                  else rl_policy.act_sample(params, obs1, k1))
+            i1 = i1.astype(jnp.int32)
+            a1 = jnp.where(has_succ, bins[i1], 0.0)
+            return est, a0, a1, obs0, obs1, i0, i1
+
+        def asa_pad(s: ScenarioState):
+            est, a0, a1 = asa_draws(s)
+            zeros = jnp.zeros(rl_features.N_FEATURES, jnp.float32)
+            return est, a0, a1, zeros, zeros, jnp.int32(-1), jnp.int32(-1)
+
+        est, a0, a1, obs0, obs1, i0, i1 = jax.lax.cond(
+            s.policy == RL, rl_draws, asa_pad, s)
+        rec0 = (s.policy == RL) & need_a0
+        rec1 = (s.policy == RL) & has_succ
+        y1 = jnp.clip(y + 1, 0, s.wf_rows.shape[0] - 1)
+        rl_obs = s.rl_obs.at[y].set(jnp.where(rec0, obs0, s.rl_obs[y]))
+        rl_obs = rl_obs.at[y1].set(jnp.where(rec1, obs1, rl_obs[y1]))
+        rl_act = s.rl_act.at[y].set(jnp.where(rec0, i0, s.rl_act[y]))
+        rl_act = rl_act.at[y1].set(jnp.where(rec1, i1, rl_act[y1]))
+        s = s._replace(rl_obs=rl_obs, rl_act=rl_act)
+
+    pw_row, ee = cascade_ee(s, a0)
 
     pred_wait = s.pred_wait.at[row].set(pw_row)
     pred_wait = pred_wait.at[sc].set(
@@ -247,13 +321,19 @@ def _chain_hook(s: ScenarioState, now, bins, greedy) -> ScenarioState:
 
 def sim_step(s: ScenarioState, bins, *, bf_passes: int = backfill.BF_PASSES,
              freed_mode: str = "ref", pred_mode: str | None = None,
-             naive: bool = True) -> ScenarioState:
+             naive: bool = True, params=None,
+             rl_mode: str = "sample") -> ScenarioState:
     """One event step. ``pred_mode`` None reads the per-scenario
     ``pred_greedy`` flag (traced); ``"greedy"``/``"sample"`` stake the
     prediction rule out statically — the greedy fleet hot path then never
     traces the categorical draw. ``naive=False`` asserts (statically) that
-    no scenario in the batch runs ASA-Naive, eliding the cancel/resubmit
-    machinery; ``grid.run_grid`` sets it from the grid's policy roster."""
+    no scenario in the batch runs ASA-Naive (or the learned policy, which
+    shares the cancel/resubmit world), eliding that machinery;
+    ``grid.run_grid`` sets it from the grid's policy roster. ``params`` /
+    ``rl_mode`` feed the learned-policy chain-hook branch (see
+    ``_chain_hook``); ``params=None`` elides it."""
+    if rl_mode not in ("sample", "greedy"):
+        raise ValueError(f"unknown rl_mode {rl_mode!r}")
     greedy = {None: s.pred_greedy, "greedy": True,
               "sample": False}[pred_mode]
     nxt = next_event_time(s, naive)
@@ -278,24 +358,26 @@ def sim_step(s: ScenarioState, bins, *, bf_passes: int = backfill.BF_PASSES,
     s = s._replace(start_pending=s.start_pending | (
         stage_ok & started[rows]))
     s = _start_hook(s, now, bins, naive)     # learn (+ naive miss) first …
-    return _chain_hook(s, now, bins, greedy)  # … then predict, as the
-    #                                           event-driven sim does
+    return _chain_hook(s, now, bins, greedy, params, rl_mode)
+    # … then predict, as the event-driven sim does
 
 
 @functools.partial(jax.jit,
                    static_argnames=("n_steps", "bf_passes", "freed_mode",
-                                    "pred_mode", "naive"))
+                                    "pred_mode", "naive", "rl_mode"))
 def simulate(s: ScenarioState, *, n_steps: int,
              bf_passes: int = backfill.BF_PASSES,
              freed_mode: str = "ref", pred_mode: str | None = None,
-             naive: bool = True) -> ScenarioState:
+             naive: bool = True, params=None,
+             rl_mode: str = "sample") -> ScenarioState:
     """Run ``n_steps`` event steps (idempotent once events are drained)."""
     m = s.est.log_p.shape[-1]
     bins = jnp.asarray(make_bins(m), jnp.float32)
 
     def body(s, _):
         return sim_step(s, bins, bf_passes=bf_passes, freed_mode=freed_mode,
-                        pred_mode=pred_mode, naive=naive), None
+                        pred_mode=pred_mode, naive=naive, params=params,
+                        rl_mode=rl_mode), None
 
     s, _ = jax.lax.scan(body, s, None, length=n_steps)
     return s
@@ -303,18 +385,21 @@ def simulate(s: ScenarioState, *, n_steps: int,
 
 @functools.partial(jax.jit,
                    static_argnames=("n_steps", "bf_passes", "freed_mode",
-                                    "pred_mode", "naive"))
+                                    "pred_mode", "naive", "rl_mode"))
 def sweep(batched: ScenarioState, *, n_steps: int,
           bf_passes: int = backfill.BF_PASSES,
           freed_mode: str = "ref", pred_mode: str | None = None,
-          naive: bool = True) -> ScenarioState:
+          naive: bool = True, params=None,
+          rl_mode: str = "sample") -> ScenarioState:
     """The fleet program: vmap(simulate) over a batched ScenarioState.
 
     ``freed_mode="tpu"`` routes the reservation scan through the Pallas
-    kernel (vmap batches it into one (B, N) grid program).
+    kernel (vmap batches it into one (B, N) grid program). ``params``
+    (the learned policy head's weights) is closed over, so it broadcasts
+    across the fleet rather than being vmapped.
     """
     return jax.vmap(
         lambda s: simulate(s, n_steps=n_steps, bf_passes=bf_passes,
                            freed_mode=freed_mode, pred_mode=pred_mode,
-                           naive=naive)
+                           naive=naive, params=params, rl_mode=rl_mode)
     )(batched)

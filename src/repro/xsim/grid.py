@@ -24,10 +24,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.sched.centers import CENTERS, CenterProfile
-from repro.sched.workflows import WORKFLOWS
+from repro.sched.workflows import WORKFLOWS, Workflow
 from repro.xsim import backfill, events, policies
 from repro.xsim.state import (ASA_NAIVE, BIGJOB, INVALID, PENDING,
-                              POLICY_NAMES, QUEUED, RUNNING, ScenarioState)
+                              POLICY_NAMES, QUEUED, RL, RL_FEATURES,
+                              RUNNING, ScenarioState)
 
 
 class XCenter(NamedTuple):
@@ -152,14 +153,15 @@ def build_scenario(key: jax.Array, center: XCenter, wf_cores: jax.Array,
     peak = jnp.max(wf_cores)
     total_dur = jnp.sum(jnp.where(wf_valid, wf_durs, 0.0))
     is_big = policy == BIGJOB
-    naive = policy == ASA_NAIVE  # ASA-Naive: cascade rows, no afterok edge
+    # ASA-Naive + the learned policy: cascade rows, no afterok edge
+    no_dep = (policy == ASA_NAIVE) | (policy == RL)
     f_valid = jnp.where(is_big, y == 0, wf_valid)
     f_cores = jnp.where(is_big, jnp.where(y == 0, peak, 0.0), wf_cores)
     f_durs = jnp.where(is_big, jnp.where(y == 0, total_dur, 0.0), wf_durs)
     f_submit = jnp.where(y == 0, cfg.t0, jnp.inf)
     nxt_valid = jnp.concatenate([f_valid[1:], jnp.zeros(1, bool)])
     f_next = jnp.where(f_valid & nxt_valid & ~is_big, wf_off + y + 1, -1)
-    f_dep = jnp.where(f_valid & (y > 0) & ~is_big & ~naive,
+    f_dep = jnp.where(f_valid & (y > 0) & ~is_big & ~no_dep,
                       wf_off + y - 1, -1)
     f_rows = jnp.where(f_valid, wf_off + y, -1)
 
@@ -201,6 +203,8 @@ def build_scenario(key: jax.Array, center: XCenter, wf_cores: jax.Array,
         canc_start=jnp.full(cfg.max_stages, jnp.inf),
         start_pending=zeros(cfg.max_stages, bool),
         chain_pending=zeros(cfg.max_stages, bool),
+        rl_obs=zeros((cfg.max_stages, RL_FEATURES)),
+        rl_act=jnp.full(cfg.max_stages, -1, jnp.int32),
         est=est,
         t=jnp.float32(0.0), free=free, total=total,
         policy=policy.astype(jnp.int32), t0=jnp.float32(cfg.t0),
@@ -243,7 +247,8 @@ class ScenarioGrid:
 
 def make_grid(cfg: XSimConfig,
               center_names: Sequence[str] = ("hpc2n", "uppmax"),
-              workflows: Sequence[str] = ("montage", "blast", "statistics"),
+              workflows: Sequence[str | Workflow] =
+              ("montage", "blast", "statistics"),
               policy_ids: Sequence[int] = (0, 1, 2),
               n_seeds: int = 4, shrink: float = 1.0 / 64.0,
               scales: Sequence[int] | None = None,
@@ -253,6 +258,8 @@ def make_grid(cfg: XSimConfig,
     Cells = centers × their paper scales × workflows × policies × seeds.
     ``shrink`` miniaturizes the centers (default 1/64: HPC2n → 263 cores)
     so the slotted tables stay small; workflow scales shrink alongside.
+    ``workflows`` entries are names in ``WORKFLOWS`` or ``Workflow``
+    instances (custom stage profiles, e.g. single-stage probes).
     """
     cells, labels, geo, bg_keys = [], [], [], []
     base = jax.random.PRNGKey(seed)
@@ -262,9 +269,10 @@ def make_grid(cfg: XSimConfig,
         for scale in (scales or profile.scales):
             eff_scale = max(int(round(scale * shrink)), 2)
             gid = geo_ids.setdefault((cname, scale), len(geo_ids))
-            for wname in workflows:
+            for w in workflows:
+                wf = w if isinstance(w, Workflow) else WORKFLOWS[w]
                 sc, sd, sv = policies.stage_arrays(
-                    WORKFLOWS[wname], eff_scale, cfg.max_stages)
+                    wf, eff_scale, cfg.max_stages)
                 for pol in policy_ids:
                     for s in range(n_seeds):
                         cells.append((profile, sc, sd, sv, pol))
@@ -275,10 +283,16 @@ def make_grid(cfg: XSimConfig,
                         bg_keys.append(jax.random.fold_in(
                             base, gid * 100_003 + s))
                         labels.append(dict(center=cname, scale=scale,
-                                           workflow=wname,
+                                           workflow=wf.name,
                                            strategy=POLICY_NAMES[pol],
                                            seed=s))
     B = len(cells)
+    if B == 0:
+        raise ValueError(
+            "empty scenario grid: the centers × scales × workflows × "
+            "policies × seeds product has no cells "
+            f"(centers={list(center_names)!r}, workflows={list(workflows)!r},"
+            f" policy_ids={list(policy_ids)!r}, n_seeds={n_seeds})")
     stacked_centers = jax.tree.map(
         lambda *xs: jnp.stack(xs),
         *[center_params(c[0], shrink) for c in cells])
@@ -297,7 +311,8 @@ def make_grid(cfg: XSimConfig,
 
 def run_grid(grid: ScenarioGrid, fleet=None, *, pred_seed: int = 1,
              bf_passes: int = backfill.BF_PASSES,
-             freed_mode: str = "ref"):
+             freed_mode: str = "ref", params=None,
+             rl_mode: str = "sample"):
     """Build + sweep the whole grid in one jitted batched program.
 
     ``fleet`` is a batched ASAState (one estimator per geometry); when
@@ -306,20 +321,32 @@ def run_grid(grid: ScenarioGrid, fleet=None, *, pred_seed: int = 1,
     predictions are sampled, and learning happens, *within* the run;
     ``pred_seed`` decorrelates the per-scenario PRNG streams across
     sweeps. ``freed_mode`` selects the reservation-scan backend
-    (``"tpu"`` = Pallas kernel). Returns (final_states, metrics dict of
-    (B,) arrays).
+    (``"tpu"`` = Pallas kernel). ``params`` is the learned submission
+    policy's weight pytree — required when the grid contains policy id 4
+    scenarios; ``rl_mode`` picks sampled (training) vs greedy
+    (evaluation) actions for them. Returns (final_states, metrics dict
+    of (B,) arrays).
     """
     from repro.xsim import compare
 
+    pols = np.asarray(grid.policies)
+    if params is None and bool(np.any(pols == RL)):
+        raise ValueError(
+            "grid contains learned-policy (rl, id 4) scenarios; pass "
+            "params= (repro.rl.policy.PolicyParams) to run_grid")
+    if rl_mode not in ("sample", "greedy"):
+        raise ValueError(f"unknown rl_mode {rl_mode!r}")
     if fleet is None:
         fleet = policies.init_fleet(int(grid.geo_idx.max()) + 1)
     ests = policies.scenario_estimators(
         fleet, jnp.asarray(grid.geo_idx), pred_seed)
     states = grid.build(ests)
-    has_naive = bool(np.any(np.asarray(grid.policies) == ASA_NAIVE))
+    # RL shares ASA-Naive's no-dependency world (cancel/resubmit machinery)
+    has_naive = bool(np.any((pols == ASA_NAIVE) | (pols == RL)))
     final = events.sweep(states, n_steps=grid.cfg.n_steps,
                          bf_passes=bf_passes, freed_mode=freed_mode,
-                         pred_mode=grid.cfg.pred_mode, naive=has_naive)
+                         pred_mode=grid.cfg.pred_mode, naive=has_naive,
+                         params=params, rl_mode=rl_mode)
     return final, compare.batched_metrics(final)
 
 
@@ -333,17 +360,19 @@ def stage_waits(final: ScenarioState, cfg: XSimConfig
 
 
 def warm_fleet(fleet, grid: ScenarioGrid, rounds: int = 2, k: int = 8,
-               seed: int = 100):
+               seed: int = 100, params=None):
     """§4.3 cross-run persistence: sweep, observe first-stage waits (a
     clean per-geometry queue sample), update every geometry's estimator,
-    repeat. Returns the warmed fleet."""
+    repeat. Returns the warmed fleet. ``params`` is forwarded to
+    ``run_grid`` (required only when the grid contains learned-policy
+    scenarios)."""
     n_geo = fleet.log_p.shape[0]
     # BigJob's row 0 is the peak-cores monolith, not a stage-shaped job —
     # exclude it so each geometry learns from clean stage-0 samples
     stagelike = np.array([lab["strategy"] != "bigjob"
                           for lab in grid.labels])
     for r in range(rounds):
-        final, _ = run_grid(grid, fleet, pred_seed=seed + r)
+        final, _ = run_grid(grid, fleet, pred_seed=seed + r, params=params)
         waits, valid = stage_waits(final, grid.cfg)
         W = np.zeros((n_geo, k), np.float32)
         V = np.zeros((n_geo, k), bool)

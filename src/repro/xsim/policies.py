@@ -57,11 +57,11 @@ def add_workflow(table: dict[str, np.ndarray], offset: int, wf: Workflow,
     """Write one workflow's stage rows into a host-side table.
 
     Returns the number of rows used. ASA rows carry the afterok
-    dependency edge; ASA-Naive rows share the cascade structure
-    (``wf_next``) but not the dependency — their early starts are
-    handled by the events.py naive hook. Wait estimates are sampled at
-    run time from the scenario's live estimator, so no predictions are
-    written here.
+    dependency edge; ASA-Naive and learned-policy (RL) rows share the
+    cascade structure (``wf_next``) but not the dependency — their early
+    starts are handled by the events.py naive hook. Wait estimates are
+    sampled at run time from the scenario's live estimator (or, for RL,
+    the policy head), so no predictions are written here.
     """
     if policy == BIGJOB:
         add_job(table, offset, cores=wf.peak_cores(scale),
@@ -69,7 +69,7 @@ def add_workflow(table: dict[str, np.ndarray], offset: int, wf: Workflow,
                 is_wf=True)
         return 1
     s = len(wf.stages)
-    with_dep = policy == ASA  # naive (§4.5): no dependency support
+    with_dep = policy == ASA  # naive (§4.5) + RL: no dependency support
     for y, st in enumerate(wf.stages):
         add_job(
             table, offset + y,

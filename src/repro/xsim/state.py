@@ -48,12 +48,19 @@ BIGJOB = 0
 PER_STAGE = 1
 ASA = 2
 ASA_NAIVE = 3
+RL = 4         # learned submission-policy head (repro.rl), naive-world rows
 
-POLICY_NAMES = ("bigjob", "per_stage", "asa", "asa_naive")
+POLICY_NAMES = ("bigjob", "per_stage", "asa", "asa_naive", "rl")
 
 INF = jnp.inf
 
 M_BINS = M_DEFAULT  # paper §4.3 wait-time alternatives (m = 53)
+
+# Observation width of the learned policy head. Lives here (not in
+# repro.rl.features, which builds exactly this many entries) because the
+# ScenarioState trajectory buffers need the size and rl.features imports
+# this module — the reverse import would be a cycle.
+RL_FEATURES = 12
 
 
 class ScenarioState(NamedTuple):
@@ -82,6 +89,9 @@ class ScenarioState(NamedTuple):
     canc_start: jax.Array   # f32 stage y's cancelled attempt's start; +inf
     start_pending: jax.Array  # bool stage start-hook not yet processed
     chain_pending: jax.Array  # bool stage chain-hook not yet processed
+    # learned-policy trajectory (REINFORCE replay buffer, (max_stages, ·)) -
+    rl_obs: jax.Array       # f32 (max_stages, RL_FEATURES) obs at each draw
+    rl_act: jax.Array       # i32 (max_stages,) chosen wait bin; -1 = no draw
     # live estimator -------------------------------------------------------
     est: asa.ASAState       # this scenario's Algorithm-1 state (learns in-scan)
     # scalars ---------------------------------------------------------------
@@ -148,6 +158,8 @@ def freeze(table: dict[str, np.ndarray], *, total_cores: float,
         canc_start=jnp.full(max_stages, jnp.inf),
         start_pending=jnp.zeros(max_stages, bool),
         chain_pending=jnp.zeros(max_stages, bool),
+        rl_obs=jnp.zeros((max_stages, RL_FEATURES)),
+        rl_act=jnp.full(max_stages, -1, jnp.int32),
         est=est,
         t=jnp.float32(now),
         free=jnp.float32(free_cores),
