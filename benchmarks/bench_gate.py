@@ -1,0 +1,130 @@
+"""Bench-trajectory regression gate for the xsim throughput matrix.
+
+Collects the per-leg ``xsim_throughput_*.json`` records the CI matrix
+uploads (ref / interpret / sharded), merges them into one
+``BENCH_xsim.json`` artifact — the per-commit point of the throughput
+trajectory — and FAILS (exit 1) when the ref-mode single-device
+scenarios/sec drops more than ``--tolerance`` (default 25%) below the
+committed baseline in ``benchmarks/baselines/xsim_throughput.json``.
+
+Only the ref-mode vmap leg is gated: the interpret leg measures the
+Pallas kernel under the (slow, deliberately unoptimized) interpreter,
+and the sharded leg splits one CI core across 8 fake devices — both are
+trajectory signals, not regression gates.
+
+Pure stdlib on purpose: the CI gate job runs it straight from a
+checkout, no jax install.
+
+  python -m benchmarks.bench_gate --bench-dir bench-artifacts \
+      --out BENCH_xsim.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+BASELINE_DEFAULT = Path(__file__).resolve().parent / "baselines" \
+    / "xsim_throughput.json"
+
+
+def leg_key(rec: dict) -> str:
+    """Stable merge key: freed_mode, plus the shard count when sharded."""
+    shards = int(rec.get("n_shards", 1) or 1)
+    mode = rec.get("freed_mode", "unknown")
+    return mode if shards == 1 else f"{mode}-shards{shards}"
+
+
+def collect_legs(bench_dir: Path) -> dict[str, dict]:
+    legs: dict[str, dict] = {}
+    for path in sorted(bench_dir.rglob("xsim_throughput*.json")):
+        try:
+            rec = json.loads(path.read_text())
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"bench_gate: skipping unreadable {path}: {e}",
+                  file=sys.stderr)
+            continue
+        if "scenarios_per_sec" not in rec:
+            print(f"bench_gate: skipping {path}: no scenarios_per_sec",
+                  file=sys.stderr)
+            continue
+        legs[leg_key(rec)] = rec
+    return legs
+
+
+def gate(legs: dict[str, dict], baseline: dict,
+         tolerance: float) -> tuple[dict, list[str]]:
+    """Returns (gate record, failure messages). Gated legs = baseline keys
+    present in the merged set; a missing gated leg is itself a failure
+    (a silently dropped matrix leg must not pass the gate)."""
+    failures: list[str] = []
+    checks: dict[str, dict] = {}
+    for key, base in baseline["legs"].items():
+        floor = base["scenarios_per_sec"] * (1.0 - tolerance)
+        rec = legs.get(key)
+        if rec is None:
+            failures.append(f"gated leg {key!r} missing from the merged "
+                            f"bench set (have: {sorted(legs)})")
+            continue
+        sps = float(rec["scenarios_per_sec"])
+        ok = sps >= floor
+        checks[key] = {
+            "scenarios_per_sec": sps,
+            "baseline": base["scenarios_per_sec"],
+            "floor": floor,
+            "ok": ok,
+        }
+        if not ok:
+            failures.append(
+                f"{key}: {sps:.0f} scenarios/sec is below the regression "
+                f"floor {floor:.0f} (baseline {base['scenarios_per_sec']:.0f}"
+                f" − {tolerance:.0%})")
+    return {"tolerance": tolerance, "checks": checks,
+            "ok": not failures}, failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bench-dir", type=Path, required=True,
+                    help="directory holding the downloaded matrix-leg "
+                         "JSONs (searched recursively)")
+    ap.add_argument("--baseline", type=Path, default=BASELINE_DEFAULT,
+                    help="committed baseline record (default: "
+                         "benchmarks/baselines/xsim_throughput.json)")
+    ap.add_argument("--out", type=Path, default=Path("BENCH_xsim.json"),
+                    help="merged bench-trajectory artifact to write")
+    ap.add_argument("--tolerance", type=float, default=0.25,
+                    help="allowed fractional drop below baseline "
+                         "(default 0.25)")
+    args = ap.parse_args()
+
+    baseline = json.loads(args.baseline.read_text())
+    legs = collect_legs(args.bench_dir)
+    if not legs:
+        print(f"bench_gate: no xsim_throughput*.json under "
+              f"{args.bench_dir}", file=sys.stderr)
+        return 1
+    gate_rec, failures = gate(legs, baseline, args.tolerance)
+
+    merged = {"legs": legs, "baseline": baseline, "gate": gate_rec}
+    args.out.parent.mkdir(parents=True, exist_ok=True)
+    args.out.write_text(json.dumps(merged, indent=2))
+
+    for key in sorted(legs):
+        rec = legs[key]
+        print(f"bench_gate/{key}: {rec['scenarios_per_sec']:.0f} "
+              f"scenarios/sec (n={rec.get('n_scenarios')}, "
+              f"shards={rec.get('n_shards', 1)}, "
+              f"backend={rec.get('backend')})")
+    if failures:
+        for f in failures:
+            print(f"bench_gate: FAIL {f}", file=sys.stderr)
+        return 1
+    print(f"bench_gate: ok — wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

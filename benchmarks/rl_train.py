@@ -38,6 +38,10 @@ def main() -> None:
     ap.add_argument("--lr", type=float, default=None)
     ap.add_argument("--n-seeds", type=int, default=None,
                     help="episodes per grid cell per training iteration")
+    ap.add_argument("--shards", type=int, default=None, metavar="N",
+                    help="shard_map rollout batches over the first N "
+                         "devices (default: single-device vmap); the "
+                         "training curve is bit-identical either way")
     ap.add_argument("--eval-seed", type=int, default=1234,
                     help="held-out ScenarioGrid background seed")
     ap.add_argument("--json", type=Path, default=None, metavar="PATH",
@@ -52,6 +56,12 @@ def main() -> None:
         kw["lr"] = args.lr
     if args.n_seeds is not None:
         kw["n_seeds"] = args.n_seeds
+    if args.shards is not None:
+        from repro.launch.mesh import shards_arg_error
+        err = shards_arg_error(args.shards)
+        if err is not None:
+            ap.error(err)
+        kw["n_shards"] = args.shards
     cfg = rl_train.TrainConfig(**kw)
     if cfg.iters < 1:
         ap.error("--iters must be >= 1")
@@ -90,6 +100,7 @@ def main() -> None:
                        "n_seeds": cfg.n_seeds, "hidden": cfg.hidden,
                        "oh_weight": cfg.oh_weight, "seed": cfg.seed,
                        "smoke": bool(args.smoke),
+                       "n_shards": cfg.n_shards,
                        "eval_seed": args.eval_seed},
             "rewards": res.rewards,
             "entropies": res.entropies,

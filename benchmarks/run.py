@@ -57,7 +57,8 @@ def dryrun_summary() -> None:
 
 
 def xsim_main(n_seeds: int = 4, include_naive: bool = False,
-              include_rl: bool = False) -> None:
+              include_rl: bool = False,
+              n_shards: int | None = None) -> None:
     """Strategy comparison on the batched engine + its throughput row.
 
     ``include_naive`` adds the §4.5 ASA-Naive (cancel/resubmit) policy to
@@ -65,6 +66,8 @@ def xsim_main(n_seeds: int = 4, include_naive: bool = False,
     variant pays for mispredictions. ``include_rl`` first trains the
     learned submission-policy head (the benchmarks.rl_train smoke recipe)
     and adds it to the sweep as policy id 4 (greedy actions).
+    ``n_shards`` shard_maps the scenario axis over that many devices
+    (validated against the inventory at the command line).
     """
     import time
 
@@ -85,14 +88,17 @@ def xsim_main(n_seeds: int = 4, include_naive: bool = False,
         from repro.rl import train as rl_train
 
         policy_ids += (RL,)
-        params = rl_train.train(rl_train.TrainConfig(**SMOKE)).params
+        # training rollouts dominate the wall-clock — shard them too
+        params = rl_train.train(rl_train.TrainConfig(
+            **SMOKE, n_shards=n_shards)).params
     grid = make_grid(cfg, n_seeds=n_seeds, shrink=1 / 64.0,
                      policy_ids=policy_ids)
     fleet = policies.init_fleet(int(grid.geo_idx.max()) + 1)
-    fleet = warm_fleet(fleet, grid, rounds=3, params=params)
+    fleet = warm_fleet(fleet, grid, rounds=3, params=params,
+                       n_shards=n_shards)
     t0 = time.time()
     _, m = run_grid(grid, fleet, pred_seed=7, params=params,
-                    rl_mode="greedy")
+                    rl_mode="greedy", n_shards=n_shards)
     elapsed = time.time() - t0
     m = {k: np.asarray(v) for k, v in m.items()}
 
@@ -166,6 +172,10 @@ if __name__ == "__main__":
                          "variant in the xsim strategy sweep; rl: train "
                          "the repro.rl smoke recipe and include the "
                          "learned head (both xsim-only)")
+    ap.add_argument("--shards", type=int, default=None, metavar="N",
+                    help="xsim only: shard_map the scenario axis over "
+                         "the first N devices (default: single-device "
+                         "vmap)")
     args = ap.parse_args()
     if args.policy is not None and args.policy not in \
             ENGINE_POLICIES[args.engine]:
@@ -176,8 +186,19 @@ if __name__ == "__main__":
             f"--policy {args.policy} is not supported by --engine "
             f"{args.engine} (the event engine takes no --policy; valid "
             f"combinations: {valid})")
+    if args.shards is not None:
+        # validated up front, like --engine/--policy: a bad shard count
+        # fails at the command line, not deep inside a shard_mapped sweep
+        if args.engine != "xsim":
+            ap.error(f"--shards requires --engine xsim (the {args.engine} "
+                     "engine is not device-parallel)")
+        from repro.launch.mesh import shards_arg_error
+        err = shards_arg_error(args.shards)
+        if err is not None:
+            ap.error(err)
     if args.engine == "xsim":
         xsim_main(include_naive=args.policy == "asa-naive",
-                  include_rl=args.policy == "rl")
+                  include_rl=args.policy == "rl",
+                  n_shards=args.shards)
     else:
         main()

@@ -8,6 +8,7 @@ CSV rows: ``name,us_per_call,derived`` (benchmarks/run.py convention).
 
   python -m benchmarks.xsim_throughput            # ≥1000 scenarios
   python -m benchmarks.xsim_throughput --smoke    # CI-sized quick pass
+  python -m benchmarks.xsim_throughput --shards 8 # device-parallel sweep
 """
 
 from __future__ import annotations
@@ -25,37 +26,43 @@ from repro.xsim.grid import XSimConfig, make_grid, run_grid
 
 
 def bench(n_seeds: int, reps: int, label: str,
-          freed_mode: str = "ref") -> dict:
+          freed_mode: str = "ref", n_shards: int | None = None) -> dict:
     cfg = XSimConfig(n_warm=16, n_backlog=12, n_arrivals=16, max_stages=9,
                      t0=3600.0)
     grid = make_grid(cfg, n_seeds=n_seeds, shrink=1 / 64.0)
     fleet = policies.init_fleet(int(grid.geo_idx.max()) + 1)
 
     t0 = time.time()
-    final, m = run_grid(grid, fleet, freed_mode=freed_mode)
+    final, m = run_grid(grid, fleet, freed_mode=freed_mode,
+                        n_shards=n_shards)
     jax.block_until_ready(final)
     compile_s = time.time() - t0
 
     t0 = time.time()
     for r in range(reps):
         final, m = run_grid(grid, fleet, pred_seed=r + 2,
-                            freed_mode=freed_mode)
+                            freed_mode=freed_mode, n_shards=n_shards)
         jax.block_until_ready(final)
     steady_s = (time.time() - t0) / reps
 
     done = float(np.mean(np.asarray(m["wf_done"])
                          / np.maximum(np.asarray(m["wf_total"]), 1)))
     sps = grid.n / steady_s
+    shards = n_shards or 1
     print(f"xsim_throughput/{label},{steady_s * 1e6 / grid.n:.0f},"
-          f"scenarios_per_sec={sps:.0f};n_scenarios={grid.n};"
+          f"scenarios_per_sec={sps:.0f};per_device_sps={sps / shards:.0f};"
+          f"n_scenarios={grid.n};n_shards={shards};"
           f"n_steps={cfg.n_steps};max_jobs={cfg.max_jobs};"
           f"compile_s={compile_s:.1f};wf_done_frac={done:.3f};"
           f"backend={jax.default_backend()};freed_mode={freed_mode}")
     return {
         "label": label,
         "scenarios_per_sec": sps,
+        "per_device_scenarios_per_sec": sps / shards,
         "us_per_scenario": steady_s * 1e6 / grid.n,
         "n_scenarios": grid.n,
+        "n_shards": shards,
+        "n_devices": len(jax.devices()),
         "n_steps": cfg.n_steps,
         "max_jobs": cfg.max_jobs,
         "reps": reps,
@@ -76,21 +83,31 @@ def main() -> None:
                                              "tpu"), default="auto",
                     help="reservation-scan backend; auto = Pallas kernel "
                          "on TPU, jnp reference elsewhere")
+    ap.add_argument("--shards", type=int, default=None, metavar="N",
+                    help="shard_map the scenario axis over the first N "
+                         "devices (default: single-device vmap); fake N "
+                         "CPU devices with XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N")
     ap.add_argument("--json", type=Path, default=None, metavar="PATH",
                     help="also write the result record as JSON (the CI "
                          "bench-trajectory artifact)")
     args = ap.parse_args()
+    if args.shards is not None:
+        from repro.launch.mesh import shards_arg_error
+        err = shards_arg_error(args.shards)
+        if err is not None:
+            ap.error(err)
     mode = args.freed_mode
     if mode == "auto":
         mode = "tpu" if jax.default_backend() == "tpu" else "ref"
     if args.smoke:
         # 54 cells × 2 seeds = 108 scenarios
         rec = bench(n_seeds=2, reps=args.reps or 1, label="smoke",
-                    freed_mode=mode)
+                    freed_mode=mode, n_shards=args.shards)
     else:
         # 54 cells × 19 seeds = 1026 scenarios in one batched program
         rec = bench(n_seeds=19, reps=args.reps or 2, label="sweep1k",
-                    freed_mode=mode)
+                    freed_mode=mode, n_shards=args.shards)
     if args.json is not None:
         args.json.parent.mkdir(parents=True, exist_ok=True)
         args.json.write_text(json.dumps(rec, indent=2))

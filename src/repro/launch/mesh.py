@@ -9,6 +9,8 @@ must see exactly one device.
 from __future__ import annotations
 
 import jax
+import numpy as np
+from jax.sharding import Mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -27,3 +29,36 @@ def make_local_mesh(model: int = 1):
     n = len(jax.devices())
     data = n // model
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_scenarios_mesh(n_shards: int | None = None) -> Mesh:
+    """1-D ``scenarios`` mesh for device-parallel xsim fleet sweeps.
+
+    ``n_shards=None`` takes every visible device. Validates the shard
+    count against the actual device inventory up front, so a bad
+    ``--shards`` fails with a clear message rather than deep inside a
+    shard_mapped sweep. (CI fakes an 8-device CPU host with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``, the same
+    trick ``launch.dryrun`` uses for 512.)
+    """
+    devices = jax.devices()
+    n = len(devices) if n_shards is None else n_shards
+    err = shards_arg_error(n, flag="n_shards")
+    if err is not None:
+        raise ValueError(err)
+    return Mesh(np.asarray(devices[:n]), ("scenarios",))
+
+
+def shards_arg_error(n_shards: int, flag: str = "--shards") -> str | None:
+    """The single source of truth for shard-count validation: None when
+    ``n_shards`` fits the visible device inventory, else the error
+    message. The benchmark CLIs feed it to ``parser.error`` up front (the
+    PR-3 ``--engine``/``--policy`` style) and ``make_scenarios_mesh``
+    raises it, so a bad count never reaches a shard_mapped sweep."""
+    n_dev = len(jax.devices())
+    if 1 <= n_shards <= n_dev:
+        return None
+    return (f"{flag} {n_shards} outside the visible device inventory "
+            f"(1..{n_dev}, backend={jax.default_backend()}); set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=N before "
+            "importing jax to fake N CPU devices")

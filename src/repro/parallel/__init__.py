@@ -1,1 +1,3 @@
-"""repro.parallel — sharding rules + collective analysis."""
+"""repro.parallel — sharding rules, collective analysis, and the
+scenario-axis (fleet) data-parallel helpers used by xsim's sharded
+sweeps (see ``repro.parallel.fleet``)."""

@@ -1,0 +1,73 @@
+"""Scenario-axis (fleet) data parallelism helpers.
+
+The xsim sweep is embarrassingly parallel over its batch axis — each
+scenario is an independent ``lax.scan`` — so scaling past one device is a
+pure data split: ``shard_map`` the leading axis of the batched
+``ScenarioState`` over a 1-D ``scenarios`` mesh, replicate the (small) RL
+``params`` pytree, and gather the per-scenario results. This module holds
+the mesh-agnostic plumbing shared by ``xsim.events.sharded_sweep``:
+
+* ``pad_batch`` — pad a batched pytree's leading axis up to a multiple of
+  the shard count (by repeating row 0: a real, runnable scenario, so pad
+  rows never produce NaNs or divergent control flow) + the validity mask;
+* ``shard_spec`` / ``replicated_spec`` — the two PartitionSpecs a fleet
+  sweep ever needs;
+* ``unpad`` — slice the gathered result back to the real batch.
+
+The mesh itself comes from ``repro.launch.mesh.make_scenarios_mesh`` (a
+function, not a constant, so importing never touches jax device state).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec
+
+SCENARIO_AXIS = "scenarios"
+
+
+def shard_spec() -> PartitionSpec:
+    """Leading axis on the ``scenarios`` mesh axis, rest replicated."""
+    return PartitionSpec(SCENARIO_AXIS)
+
+
+def replicated_spec() -> PartitionSpec:
+    """Fully replicated (RL params, fleet estimators broadcast)."""
+    return PartitionSpec()
+
+
+def batch_size(tree) -> int:
+    """Leading-axis length of a batched pytree (must be non-empty)."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    if not leaves:
+        raise ValueError("batch_size: pytree has no array leaves")
+    return int(leaves[0].shape[0])
+
+
+def pad_batch(tree, n_shards: int):
+    """Pad ``tree``'s leading axis to a multiple of ``n_shards``.
+
+    Pad rows are copies of row 0 — a *valid* scenario, so the padded
+    sweep runs the same control flow everywhere and the pad work is
+    simply discarded. Returns ``(padded_tree, mask)`` where ``mask`` is a
+    ``(B_padded,)`` bool marking the real rows; when no padding is needed
+    the tree is returned untouched.
+    """
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    b = batch_size(tree)
+    pad = (-b) % n_shards
+    mask = jnp.arange(b + pad) < b
+    if pad == 0:
+        return tree, mask
+    padded = jax.tree.map(
+        lambda x: jnp.concatenate(
+            [x, jnp.broadcast_to(x[:1], (pad,) + x.shape[1:])]),
+        tree)
+    return padded, mask
+
+
+def unpad(tree, n_real: int):
+    """Slice a (possibly padded) batched pytree back to ``n_real`` rows."""
+    return jax.tree.map(lambda x: x[:n_real], tree)

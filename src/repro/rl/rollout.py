@@ -59,14 +59,19 @@ def trajectory(final: ScenarioState, metrics: dict[str, jax.Array],
 
 def collect(grid: ScenarioGrid, params, fleet=None, *, pred_seed: int = 1,
             rl_mode: str = "sample", oh_weight: float = OH_WEIGHT_DEFAULT,
-            freed_mode: str = "ref"):
+            freed_mode: str = "ref", n_shards: int | None = None,
+            mesh=None):
     """Run the grid under ``params`` and return (final, metrics, traj).
 
     ``rl_mode="sample"`` draws stochastic actions (training);
     ``"greedy"`` takes the argmax bin (evaluation). ``pred_seed``
     decorrelates the per-scenario action streams between iterations.
+    ``n_shards``/``mesh`` shard the episode batch across devices (params
+    replicated, trajectories gathered) — bit-identical to the default
+    single-device vmap, so training curves don't depend on the device
+    count.
     """
     final, m = run_grid(grid, fleet, pred_seed=pred_seed,
                         freed_mode=freed_mode, params=params,
-                        rl_mode=rl_mode)
+                        rl_mode=rl_mode, n_shards=n_shards, mesh=mesh)
     return final, m, trajectory(final, m, oh_weight)

@@ -50,6 +50,7 @@ class TrainConfig:
     center_names: Sequence[str] = ("hpc2n", "uppmax")
     workflows: Sequence[str] = ("montage", "blast", "statistics")
     shrink: float = 1.0 / 64.0
+    n_shards: int | None = None  # device-parallel rollouts (None = vmap)
     sim: XSimConfig = field(default_factory=lambda: XSimConfig(
         n_warm=24, n_backlog=16, n_arrivals=24, max_stages=9, t0=3600.0))
 
@@ -99,7 +100,8 @@ def warmed_fleet(cfg: TrainConfig, grid_seed: int):
                           policy_ids=(PER_STAGE, ASA), n_seeds=2,
                           shrink=cfg.shrink, seed=grid_seed)
     fleet = xpolicies.init_fleet(int(warm_grid.geo_idx.max()) + 1)
-    return warm_fleet(fleet, warm_grid, rounds=cfg.warm_rounds)
+    return warm_fleet(fleet, warm_grid, rounds=cfg.warm_rounds,
+                      n_shards=cfg.n_shards)
 
 
 def train(cfg: TrainConfig = TrainConfig()) -> TrainResult:
@@ -116,7 +118,8 @@ def train(cfg: TrainConfig = TrainConfig()) -> TrainResult:
                          shrink=cfg.shrink, seed=cfg.seed * 10_000 + i + 1)
         _, _, traj = rollout.collect(grid, params, fleet,
                                      pred_seed=i + 1, rl_mode="sample",
-                                     oh_weight=cfg.oh_weight)
+                                     oh_weight=cfg.oh_weight,
+                                     n_shards=cfg.n_shards)
         rewards.append(float(jnp.mean(traj.reward)))
         params, ent = reinforce_step(params, traj.obs, traj.act,
                                      traj.reward, cfg.lr)
@@ -146,7 +149,8 @@ def evaluate(params: P.PolicyParams, cfg: TrainConfig = TrainConfig(), *,
                      policy_ids=(BIGJOB, PER_STAGE, ASA, ASA_NAIVE, RL),
                      n_seeds=n_seeds, shrink=cfg.shrink, seed=eval_seed)
     _, m, traj = rollout.collect(grid, params, fleet, pred_seed=eval_seed,
-                                 rl_mode="greedy", oh_weight=w)
+                                 rl_mode="greedy", oh_weight=w,
+                                 n_shards=cfg.n_shards)
     reward = np.asarray(traj.reward)
     m = {k: np.asarray(v) for k, v in m.items()}
 

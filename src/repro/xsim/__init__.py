@@ -3,20 +3,22 @@ evaluation.
 
 A second, array-native simulation stack beside the event-driven
 ``repro.sched.queue_sim``: fixed-slot job tables, ``lax.scan`` event
-stepping, ``jax.vmap`` over thousands of scenarios, a Pallas kernel for
-the EASY-backfill reservation scan. See README.md in this package for the
+stepping, ``jax.vmap`` over thousands of scenarios (``shard_map``'d
+across devices via ``run_grid(n_shards=...)``), a Pallas kernel for the
+EASY-backfill reservation scan. See README.md in this package for the
 design and its approximations.
 """
 
 from repro.xsim.state import (ASA, ASA_NAIVE, BIGJOB, CANCELLED, PER_STAGE,
                               POLICY_NAMES, RL, ScenarioState)
-from repro.xsim.events import simulate, sweep
+from repro.xsim.events import sharded_sweep, simulate, sweep
 from repro.xsim.grid import (ScenarioGrid, XSimConfig, center_params,
                              make_grid, run_grid)
 from repro.xsim.compare import batched_metrics, metrics
 
 __all__ = [
     "ASA", "ASA_NAIVE", "BIGJOB", "CANCELLED", "PER_STAGE", "POLICY_NAMES",
-    "RL", "ScenarioState", "simulate", "sweep", "ScenarioGrid", "XSimConfig",
-    "center_params", "make_grid", "run_grid", "batched_metrics", "metrics",
+    "RL", "ScenarioState", "simulate", "sweep", "sharded_sweep",
+    "ScenarioGrid", "XSimConfig", "center_params", "make_grid", "run_grid",
+    "batched_metrics", "metrics",
 ]

@@ -85,6 +85,30 @@ def metrics(s: ScenarioState) -> dict[str, jax.Array]:
 batched_metrics = jax.jit(jax.vmap(metrics))
 
 
+def sharded_batched_metrics(final: ScenarioState, mesh
+                            ) -> dict[str, jax.Array]:
+    """``batched_metrics`` under a 1-D ``scenarios`` mesh: each device
+    reduces its own block of final states to the per-scenario metric
+    scalars, and only the small (B,) columns are gathered — for fleets
+    whose final states live sharded across devices (same padding
+    semantics as ``events.sharded_sweep``). Values match the vmap path
+    up to reduction order (~1 ULP on the summed columns: XLA associates
+    the per-scenario sums differently per block shape), which is why
+    ``run_grid`` — whose contract is bitwise device-count independence —
+    computes metrics on the gathered states instead."""
+    from jax.experimental.shard_map import shard_map
+
+    from repro.parallel import fleet as pfleet
+
+    n_shards = mesh.shape[pfleet.SCENARIO_AXIS]
+    b = pfleet.batch_size(final)
+    padded, _mask = pfleet.pad_batch(final, n_shards)
+    spec = pfleet.shard_spec()
+    fn = shard_map(jax.vmap(metrics), mesh=mesh, in_specs=(spec,),
+                   out_specs=spec, check_rep=False)
+    return pfleet.unpad(fn(padded), b)
+
+
 def wf_rows(s: ScenarioState) -> dict[str, np.ndarray]:
     """Host-side view of the workflow rows (stage-ordered), for tests."""
     mask = np.asarray(s.is_wf)

@@ -46,6 +46,10 @@ than one stage fires at the same instant the ``repass`` flag forces extra
 same-time steps until the pending set drains, preserving the event-driven
 runner's per-event ordering without paying per-stage estimator work on
 every step.
+
+``sweep`` is the single-device fleet program (vmap over the batch);
+``sharded_sweep`` shard_maps the same program's scenario axis over a 1-D
+``scenarios`` device mesh — bit-identical, scenarios never communicate.
 """
 
 from __future__ import annotations
@@ -54,6 +58,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
 
 from repro.core import asa
 from repro.core.bins import make_bins
@@ -403,3 +408,58 @@ def sweep(batched: ScenarioState, *, n_steps: int,
                            freed_mode=freed_mode, pred_mode=pred_mode,
                            naive=naive, params=params, rl_mode=rl_mode)
     )(batched)
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_sweep_fn(mesh, n_steps, bf_passes, freed_mode, pred_mode,
+                      naive, rl_mode, with_params):
+    """Compiled shard_map(sweep) for one (mesh, static-config) cell.
+
+    Cached so repeated sweeps (warm_fleet rounds, RL iterations, bench
+    reps) reuse one jitted program — the same role ``jax.jit``'s own
+    cache plays on the vmap path.
+    """
+    from repro.parallel import fleet as pfleet
+
+    spec = pfleet.shard_spec()
+
+    def block(shard: ScenarioState, params):
+        return sweep(shard, n_steps=n_steps, bf_passes=bf_passes,
+                     freed_mode=freed_mode, pred_mode=pred_mode,
+                     naive=naive, params=params, rl_mode=rl_mode)
+
+    if with_params:
+        fn = shard_map(block, mesh=mesh,
+                       in_specs=(spec, pfleet.replicated_spec()),
+                       out_specs=spec, check_rep=False)
+    else:
+        fn = shard_map(lambda shard: block(shard, None), mesh=mesh,
+                       in_specs=(spec,), out_specs=spec, check_rep=False)
+    return jax.jit(fn)
+
+
+def sharded_sweep(batched: ScenarioState, *, mesh, n_steps: int,
+                  bf_passes: int = backfill.BF_PASSES,
+                  freed_mode: str = "ref", pred_mode: str | None = None,
+                  naive: bool = True, params=None,
+                  rl_mode: str = "sample") -> ScenarioState:
+    """``sweep`` split over the devices of a 1-D ``scenarios`` mesh.
+
+    Each device runs the plain vmapped program on its contiguous block of
+    scenarios (``params`` replicated), so the gathered result is
+    bit-identical to the single-device ``sweep`` — pinned by
+    tests/test_xsim_sharded.py. Batch sizes not divisible by the shard
+    count are padded with copies of scenario 0 (a valid row, so the pad
+    lanes run the same control flow) and the pad rows are sliced off the
+    gathered output. Build the mesh with
+    ``repro.launch.mesh.make_scenarios_mesh``.
+    """
+    from repro.parallel import fleet as pfleet
+
+    n_shards = mesh.shape[pfleet.SCENARIO_AXIS]
+    b = pfleet.batch_size(batched)
+    padded, _mask = pfleet.pad_batch(batched, n_shards)
+    fn = _sharded_sweep_fn(mesh, n_steps, bf_passes, freed_mode, pred_mode,
+                           naive, rl_mode, params is not None)
+    out = fn(padded, params) if params is not None else fn(padded)
+    return pfleet.unpad(out, b)

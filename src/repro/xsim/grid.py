@@ -312,7 +312,8 @@ def make_grid(cfg: XSimConfig,
 def run_grid(grid: ScenarioGrid, fleet=None, *, pred_seed: int = 1,
              bf_passes: int = backfill.BF_PASSES,
              freed_mode: str = "ref", params=None,
-             rl_mode: str = "sample"):
+             rl_mode: str = "sample", n_shards: int | None = None,
+             mesh=None):
     """Build + sweep the whole grid in one jitted batched program.
 
     ``fleet`` is a batched ASAState (one estimator per geometry); when
@@ -324,8 +325,16 @@ def run_grid(grid: ScenarioGrid, fleet=None, *, pred_seed: int = 1,
     (``"tpu"`` = Pallas kernel). ``params`` is the learned submission
     policy's weight pytree — required when the grid contains policy id 4
     scenarios; ``rl_mode`` picks sampled (training) vs greedy
-    (evaluation) actions for them. Returns (final_states, metrics dict
-    of (B,) arrays).
+    (evaluation) actions for them.
+
+    ``n_shards`` / ``mesh`` select the device-parallel path: the scenario
+    axis is shard_mapped over a 1-D ``scenarios`` mesh (``mesh`` wins
+    when both are given; ``n_shards`` builds one over the first N visible
+    devices via ``launch.mesh.make_scenarios_mesh``, validating N against
+    the device inventory). Batches not divisible by the shard count are
+    padded and the pad rows dropped; the result is bit-identical to the
+    default single-device vmap (both pinned by test). Returns
+    (final_states, metrics dict of (B,) arrays).
     """
     from repro.xsim import compare
 
@@ -336,6 +345,9 @@ def run_grid(grid: ScenarioGrid, fleet=None, *, pred_seed: int = 1,
             "params= (repro.rl.policy.PolicyParams) to run_grid")
     if rl_mode not in ("sample", "greedy"):
         raise ValueError(f"unknown rl_mode {rl_mode!r}")
+    if mesh is None and n_shards is not None:
+        from repro.launch.mesh import make_scenarios_mesh
+        mesh = make_scenarios_mesh(n_shards)
     if fleet is None:
         fleet = policies.init_fleet(int(grid.geo_idx.max()) + 1)
     ests = policies.scenario_estimators(
@@ -343,10 +355,17 @@ def run_grid(grid: ScenarioGrid, fleet=None, *, pred_seed: int = 1,
     states = grid.build(ests)
     # RL shares ASA-Naive's no-dependency world (cancel/resubmit machinery)
     has_naive = bool(np.any((pols == ASA_NAIVE) | (pols == RL)))
-    final = events.sweep(states, n_steps=grid.cfg.n_steps,
-                         bf_passes=bf_passes, freed_mode=freed_mode,
-                         pred_mode=grid.cfg.pred_mode, naive=has_naive,
-                         params=params, rl_mode=rl_mode)
+    kw = dict(n_steps=grid.cfg.n_steps, bf_passes=bf_passes,
+              freed_mode=freed_mode, pred_mode=grid.cfg.pred_mode,
+              naive=has_naive, params=params, rl_mode=rl_mode)
+    if mesh is None:
+        final = events.sweep(states, **kw)
+    else:
+        final = events.sharded_sweep(states, mesh=mesh, **kw)
+    # metrics always run on the gathered final states: the sweep itself
+    # is bit-identical across shard counts, so this keeps the metrics
+    # bit-identical too (compare.sharded_batched_metrics reduces on the
+    # shards instead, at the price of ~1-ULP reduction-order wiggle)
     return final, compare.batched_metrics(final)
 
 
@@ -360,19 +379,25 @@ def stage_waits(final: ScenarioState, cfg: XSimConfig
 
 
 def warm_fleet(fleet, grid: ScenarioGrid, rounds: int = 2, k: int = 8,
-               seed: int = 100, params=None):
+               seed: int = 100, params=None, n_shards: int | None = None,
+               mesh=None):
     """§4.3 cross-run persistence: sweep, observe first-stage waits (a
     clean per-geometry queue sample), update every geometry's estimator,
     repeat. Returns the warmed fleet. ``params`` is forwarded to
     ``run_grid`` (required only when the grid contains learned-policy
-    scenarios)."""
+    scenarios); ``n_shards``/``mesh`` likewise select its device-parallel
+    sweep path."""
     n_geo = fleet.log_p.shape[0]
     # BigJob's row 0 is the peak-cores monolith, not a stage-shaped job —
     # exclude it so each geometry learns from clean stage-0 samples
     stagelike = np.array([lab["strategy"] != "bigjob"
                           for lab in grid.labels])
+    if mesh is None and n_shards is not None:
+        from repro.launch.mesh import make_scenarios_mesh
+        mesh = make_scenarios_mesh(n_shards)
     for r in range(rounds):
-        final, _ = run_grid(grid, fleet, pred_seed=seed + r, params=params)
+        final, _ = run_grid(grid, fleet, pred_seed=seed + r, params=params,
+                            mesh=mesh)
         waits, valid = stage_waits(final, grid.cfg)
         W = np.zeros((n_geo, k), np.float32)
         V = np.zeros((n_geo, k), bool)

@@ -1,0 +1,179 @@
+"""Sharded fleet sweeps: shard_map path ≡ single-device vmap, bit for bit.
+
+The scenario axis is embarrassingly parallel, so ``run_grid(...,
+n_shards=k)`` must reproduce the default vmap sweep exactly — final job
+tables, live estimator states (including PRNG keys), RL replay buffers
+and the sampled prediction sequences. These tests pin that contract on
+1/2/4/8 shards, including a batch size not divisible by the shard count
+(the padding mask path).
+
+Single-device runs exercise the ``n_shards=1`` mesh + the padding
+helpers; the multi-device cases skip unless enough devices are visible.
+CI's ``xsim-sharded`` job fakes 8 CPU devices with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the
+``launch.dryrun`` trick) and runs the whole file.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.mesh import make_scenarios_mesh
+from repro.parallel import fleet as pfleet
+from repro.xsim import policies
+from repro.xsim.grid import XSimConfig, make_grid, run_grid, warm_fleet
+from repro.xsim.state import ASA, ASA_NAIVE, BIGJOB, PER_STAGE, RL
+
+N_DEV = len(jax.devices())
+
+needs = pytest.mark.skipif  # readability alias for the device gates
+
+
+def tiny_cfg(pred_mode: str = "greedy") -> XSimConfig:
+    return XSimConfig(n_warm=8, n_backlog=6, n_arrivals=8, max_stages=9,
+                      t0=1800.0, pred_mode=pred_mode)
+
+
+def tiny_grid(cfg, policy_ids=(BIGJOB, PER_STAGE, ASA, ASA_NAIVE),
+              n_seeds=1):
+    # hpc2n has 3 paper scales → B = 3 · |policies| · n_seeds
+    return make_grid(cfg, center_names=("hpc2n",), workflows=("blast",),
+                     policy_ids=policy_ids, n_seeds=n_seeds,
+                     shrink=1 / 64.0)
+
+
+def assert_trees_equal(a, b):
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# --------------------------------------------------------- mesh + padding
+
+
+def test_scenarios_mesh_validates_device_count():
+    with pytest.raises(ValueError, match="device"):
+        make_scenarios_mesh(N_DEV + 1)
+    with pytest.raises(ValueError, match="device"):
+        make_scenarios_mesh(0)
+    mesh = make_scenarios_mesh(1)
+    assert mesh.shape["scenarios"] == 1
+
+
+def test_pad_batch_pads_with_row_zero():
+    tree = {"a": jnp.arange(5.0), "b": jnp.arange(10.0).reshape(5, 2)}
+    padded, mask = pfleet.pad_batch(tree, 4)
+    assert padded["a"].shape == (8,) and padded["b"].shape == (8, 2)
+    np.testing.assert_array_equal(np.asarray(mask),
+                                  [True] * 5 + [False] * 3)
+    # pad rows replicate row 0: a valid scenario, never NaN machinery
+    np.testing.assert_array_equal(np.asarray(padded["a"][5:]), [0.0] * 3)
+    np.testing.assert_array_equal(np.asarray(padded["b"][5:]),
+                                  np.broadcast_to([0.0, 1.0], (3, 2)))
+    np.testing.assert_array_equal(
+        np.asarray(pfleet.unpad(padded, 5)["a"]), np.asarray(tree["a"]))
+
+
+def test_pad_batch_divisible_is_identity():
+    tree = {"a": jnp.arange(6.0)}
+    padded, mask = pfleet.pad_batch(tree, 3)
+    assert padded["a"] is tree["a"]
+    assert bool(jnp.all(mask))
+    with pytest.raises(ValueError, match="n_shards"):
+        pfleet.pad_batch(tree, 0)
+
+
+# ------------------------------------------------- sharded ≡ vmap (1 dev)
+
+
+def test_one_shard_matches_vmap_bitwise():
+    cfg = tiny_cfg()
+    grid = tiny_grid(cfg)
+    fleet = policies.init_fleet(int(grid.geo_idx.max()) + 1)
+    f0, m0 = run_grid(grid, fleet, pred_seed=3)
+    f1, m1 = run_grid(grid, fleet, pred_seed=3, n_shards=1)
+    assert_trees_equal(f0, f1)
+    assert_trees_equal(m0, m1)
+
+
+# --------------------------------------------- sharded ≡ vmap (multi-dev)
+
+
+@pytest.mark.parametrize("k", [2, 4, 8])
+def test_sharded_run_grid_bit_identical(k):
+    if N_DEV < k:
+        pytest.skip(f"needs {k} devices, have {N_DEV} (set XLA_FLAGS="
+                    "--xla_force_host_platform_device_count=8)")
+    # pred_mode="sample" pins the sampled prediction sequences too
+    cfg = tiny_cfg(pred_mode="sample")
+    grid = tiny_grid(cfg)                     # B = 12: pads on k = 8
+    fleet = policies.init_fleet(int(grid.geo_idx.max()) + 1)
+    f0, m0 = run_grid(grid, fleet, pred_seed=3)
+    fk, mk = run_grid(grid, fleet, pred_seed=3, n_shards=k)
+    assert_trees_equal(f0, fk)                # incl. est PRNG keys
+    assert_trees_equal(m0, mk)
+
+
+@needs(N_DEV < 2, reason="needs ≥2 devices")
+def test_sharded_nondivisible_batch_padding_mask():
+    cfg = tiny_cfg()
+    grid = tiny_grid(cfg, policy_ids=(ASA,), n_seeds=3)   # B = 9
+    assert grid.n % 2 == 1                    # exercises the pad lane
+    fleet = policies.init_fleet(int(grid.geo_idx.max()) + 1)
+    f0, m0 = run_grid(grid, fleet, pred_seed=5)
+    f2, m2 = run_grid(grid, fleet, pred_seed=5, n_shards=2)
+    assert pfleet.batch_size(f2) == grid.n    # pad rows sliced off
+    assert_trees_equal(f0, f2)
+    assert_trees_equal(m0, m2)
+
+
+@needs(N_DEV < 2, reason="needs ≥2 devices")
+def test_sharded_warm_fleet_bit_identical():
+    cfg = tiny_cfg()
+    grid = tiny_grid(cfg, policy_ids=(PER_STAGE, ASA), n_seeds=2)
+    fleet = policies.init_fleet(int(grid.geo_idx.max()) + 1)
+    w0 = warm_fleet(fleet, grid, rounds=2)
+    w2 = warm_fleet(fleet, grid, rounds=2, n_shards=2)
+    assert_trees_equal(w0, w2)
+
+
+@needs(N_DEV < 2, reason="needs ≥2 devices")
+def test_sharded_batched_metrics_matches_to_reduction_order():
+    """compare.sharded_batched_metrics reduces on the shards (for fleets
+    whose states stay device-resident); equal to the gathered-path
+    metrics up to XLA reduction-order rounding on the summed columns."""
+    from repro.xsim import compare
+
+    cfg = tiny_cfg()
+    grid = tiny_grid(cfg, policy_ids=(ASA,), n_seeds=3)   # B = 9, pads
+    fleet = policies.init_fleet(int(grid.geo_idx.max()) + 1)
+    final, m = run_grid(grid, fleet, pred_seed=5)
+    ms = compare.sharded_batched_metrics(final, make_scenarios_mesh(2))
+    assert sorted(ms) == sorted(m)
+    for k in m:
+        np.testing.assert_allclose(np.asarray(ms[k]), np.asarray(m[k]),
+                                   rtol=1e-6, atol=0.0)
+
+
+@needs(N_DEV < 2, reason="needs ≥2 devices")
+def test_sharded_rl_replay_buffers_bit_identical():
+    from repro.rl import policy as rl_policy
+
+    params = rl_policy.init_params(jax.random.PRNGKey(0))
+    cfg = tiny_cfg()
+    grid = tiny_grid(cfg, policy_ids=(RL,), n_seeds=3)    # B = 9, pads
+    fleet = policies.init_fleet(int(grid.geo_idx.max()) + 1)
+    f0, m0 = run_grid(grid, fleet, pred_seed=7, params=params,
+                      rl_mode="sample")
+    f2, m2 = run_grid(grid, fleet, pred_seed=7, params=params,
+                      rl_mode="sample", n_shards=2)
+    # the REINFORCE replay (obs + chosen bins) must be device-count-free
+    np.testing.assert_array_equal(np.asarray(f0.rl_obs),
+                                  np.asarray(f2.rl_obs))
+    np.testing.assert_array_equal(np.asarray(f0.rl_act),
+                                  np.asarray(f2.rl_act))
+    assert_trees_equal(f0, f2)
+    assert_trees_equal(m0, m2)
