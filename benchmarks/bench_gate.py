@@ -3,9 +3,14 @@
 Collects the per-leg ``xsim_throughput_*.json`` records the CI matrix
 uploads (ref / interpret / sharded), merges them into one
 ``BENCH_xsim.json`` artifact — the per-commit point of the throughput
-trajectory — and FAILS (exit 1) when the ref-mode single-device
-scenarios/sec drops more than ``--tolerance`` (default 25%) below the
-committed baseline in ``benchmarks/baselines/xsim_throughput.json``.
+trajectory, including each leg's ``--profile`` breakdown (steps executed
+vs. budget, chunks run, compile/steady split) when present — and FAILS
+(exit 1) when the ref-mode single-device scenarios/sec drops more than
+``--tolerance`` (default 25%) below the committed baseline in
+``benchmarks/baselines/xsim_throughput.json``, or when its
+us_per_scenario exceeds the mirrored ceiling (baseline ÷ (1 −
+tolerance) — the two fields are reciprocal, so both checks trip at the
+same throughput).
 
 Only the ref-mode vmap leg is gated: the interpret leg measures the
 Pallas kernel under the (slow, deliberately unoptimized) interpreter,
@@ -58,7 +63,12 @@ def gate(legs: dict[str, dict], baseline: dict,
          tolerance: float) -> tuple[dict, list[str]]:
     """Returns (gate record, failure messages). Gated legs = baseline keys
     present in the merged set; a missing gated leg is itself a failure
-    (a silently dropped matrix leg must not pass the gate)."""
+    (a silently dropped matrix leg must not pass the gate). Both sides of
+    the throughput record are gated when the baseline carries them:
+    ``scenarios_per_sec`` may not drop more than ``tolerance`` below the
+    baseline, and ``us_per_scenario`` (the per-scenario latency) may not
+    exceed the mirrored ceiling baseline ÷ (1 − tolerance); a
+    baseline-gated metric missing from the record is a failure."""
     failures: list[str] = []
     checks: dict[str, dict] = {}
     for key, base in baseline["legs"].items():
@@ -81,6 +91,32 @@ def gate(legs: dict[str, dict], baseline: dict,
                 f"{key}: {sps:.0f} scenarios/sec is below the regression "
                 f"floor {floor:.0f} (baseline {base['scenarios_per_sec']:.0f}"
                 f" − {tolerance:.0%})")
+        if "us_per_scenario" in base:
+            if "us_per_scenario" not in rec:
+                # same philosophy as a missing leg: a baseline-gated
+                # metric silently vanishing from the record must not pass
+                failures.append(
+                    f"{key}: record carries no us_per_scenario but the "
+                    f"baseline gates it")
+                checks[key]["ok"] = False
+                continue
+            # ceiling = baseline / (1 − tolerance): the exact mirror of
+            # the scen/s floor (the two fields are reciprocal), so both
+            # checks trip at the same throughput and the us gate only
+            # adds signal if a future bench derives the fields
+            # independently
+            ceil = base["us_per_scenario"] / (1.0 - tolerance)
+            us = float(rec["us_per_scenario"])
+            us_ok = us <= ceil
+            checks[key].update(us_per_scenario=us,
+                               us_baseline=base["us_per_scenario"],
+                               us_ceiling=ceil, us_ok=us_ok)
+            checks[key]["ok"] = ok and us_ok
+            if not us_ok:
+                failures.append(
+                    f"{key}: {us:.0f} us/scenario is above the regression "
+                    f"ceiling {ceil:.0f} (baseline "
+                    f"{base['us_per_scenario']:.0f} ÷ (1 − {tolerance:.0%}))")
     return {"tolerance": tolerance, "checks": checks,
             "ok": not failures}, failures
 
@@ -118,6 +154,20 @@ def main() -> int:
               f"scenarios/sec (n={rec.get('n_scenarios')}, "
               f"shards={rec.get('n_shards', 1)}, "
               f"backend={rec.get('backend')})")
+        prof = rec.get("profile")
+        if prof:
+            # budget-bound → event-bound trajectory signal (see
+            # xsim_throughput --profile): steps the engine actually ran
+            # vs the static n_steps budget, and the chunked-drain shape
+            print(f"bench_gate/{key}/profile: "
+                  f"steps {prof.get('steps_executed_max')} max / "
+                  f"{prof.get('steps_executed_mean', 0):.1f} mean "
+                  f"of {prof.get('steps_budget')} budget, "
+                  f"chunks {prof.get('chunks_run')}×"
+                  f"{prof.get('chunk_steps')}, "
+                  f"drained {prof.get('drained_frac', 0):.3f}, "
+                  f"compile {prof.get('compile_s', 0):.1f}s / steady "
+                  f"{prof.get('steady_s', 0):.2f}s")
     if failures:
         for f in failures:
             print(f"bench_gate: FAIL {f}", file=sys.stderr)

@@ -9,6 +9,7 @@ CSV rows: ``name,us_per_call,derived`` (benchmarks/run.py convention).
   python -m benchmarks.xsim_throughput            # ≥1000 scenarios
   python -m benchmarks.xsim_throughput --smoke    # CI-sized quick pass
   python -m benchmarks.xsim_throughput --shards 8 # device-parallel sweep
+  python -m benchmarks.xsim_throughput --profile  # steps-vs-budget record
 """
 
 from __future__ import annotations
@@ -21,12 +22,45 @@ from pathlib import Path
 import jax
 import numpy as np
 
-from repro.xsim import policies
+from repro.xsim import backfill, events, policies
 from repro.xsim.grid import XSimConfig, make_grid, run_grid
 
 
+def profile_record(final, cfg: XSimConfig, compile_s: float,
+                   steady_s: float) -> dict:
+    """Per-phase breakdown: where the sweep's steps (and seconds) went.
+
+    ``steps_executed_*`` comes from the per-scenario ``steps`` counter
+    (drained no-op steps don't count); the gap to ``steps_budget`` is the
+    budget-bound → event-bound signal the trajectory tracks. Chunk count
+    is derived, not measured: the drain exit is lockstep over a device's
+    batch, so the busiest lane steps through every chunk the loop ran and
+    ``chunks_run = ⌈max(steps) / chunk_steps⌉`` (per device — the max
+    over devices when sharded; exact whenever the sweep drains, i.e.
+    ``drained_frac == 1``, counting the static remainder scan as part of
+    its preceding chunk).
+    """
+    steps = np.asarray(final.steps)
+    drained = np.isinf(np.asarray(
+        jax.jit(jax.vmap(events.next_event_time))(final)))
+    chunks = (-(-int(steps.max()) // cfg.chunk_steps)
+              if cfg.chunk_steps else 0)
+    return {
+        "steps_budget": cfg.n_steps,
+        "chunk_steps": cfg.chunk_steps,
+        "chunks_run": chunks,
+        "steps_executed_max": int(steps.max()),
+        "steps_executed_mean": float(steps.mean()),
+        "steps_executed_min": int(steps.min()),
+        "drained_frac": float(drained.mean()),
+        "compile_s": compile_s,
+        "steady_s": steady_s,
+    }
+
+
 def bench(n_seeds: int, reps: int, label: str,
-          freed_mode: str = "ref", n_shards: int | None = None) -> dict:
+          freed_mode: str = "ref", n_shards: int | None = None,
+          profile: bool = False) -> dict:
     cfg = XSimConfig(n_warm=16, n_backlog=12, n_arrivals=16, max_stages=9,
                      t0=3600.0)
     grid = make_grid(cfg, n_seeds=n_seeds, shrink=1 / 64.0)
@@ -55,7 +89,7 @@ def bench(n_seeds: int, reps: int, label: str,
           f"n_steps={cfg.n_steps};max_jobs={cfg.max_jobs};"
           f"compile_s={compile_s:.1f};wf_done_frac={done:.3f};"
           f"backend={jax.default_backend()};freed_mode={freed_mode}")
-    return {
+    rec = {
         "label": label,
         "scenarios_per_sec": sps,
         "per_device_scenarios_per_sec": sps / shards,
@@ -72,6 +106,16 @@ def bench(n_seeds: int, reps: int, label: str,
         "freed_mode": freed_mode,
         "in_scan_learning": True,   # within-run ASA learning is always on
     }
+    if profile:
+        rec["profile"] = p = profile_record(final, cfg, compile_s, steady_s)
+        print(f"xsim_throughput/{label}/profile: "
+              f"steps={p['steps_executed_max']}max/"
+              f"{p['steps_executed_mean']:.1f}mean of "
+              f"{p['steps_budget']} budget; "
+              f"chunks={p['chunks_run']}x{p['chunk_steps']}; "
+              f"drained={p['drained_frac']:.3f}; "
+              f"compile={p['compile_s']:.1f}s steady={p['steady_s']:.2f}s")
+    return rec
 
 
 def main() -> None:
@@ -79,10 +123,16 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="small CI-sized run (fast, CPU-friendly)")
     ap.add_argument("--reps", type=int, default=None)
-    ap.add_argument("--freed-mode", choices=("auto", "ref", "interpret",
-                                             "tpu"), default="auto",
-                    help="reservation-scan backend; auto = Pallas kernel "
-                         "on TPU, jnp reference elsewhere")
+    ap.add_argument("--freed-mode",
+                    choices=("auto", *backfill.FREED_MODES),
+                    default="auto",
+                    help="reservation-scan backend; auto = sorted Pallas "
+                         "kernel on TPU, sorted jnp elsewhere; ref_n2 = "
+                         "the O(n²) differential reference")
+    ap.add_argument("--profile", action="store_true",
+                    help="add a per-phase breakdown (steps executed vs "
+                         "budget, chunks run, compile/steady split) to "
+                         "the JSON record")
     ap.add_argument("--shards", type=int, default=None, metavar="N",
                     help="shard_map the scenario axis over the first N "
                          "devices (default: single-device vmap); fake N "
@@ -103,11 +153,13 @@ def main() -> None:
     if args.smoke:
         # 54 cells × 2 seeds = 108 scenarios
         rec = bench(n_seeds=2, reps=args.reps or 1, label="smoke",
-                    freed_mode=mode, n_shards=args.shards)
+                    freed_mode=mode, n_shards=args.shards,
+                    profile=args.profile)
     else:
         # 54 cells × 19 seeds = 1026 scenarios in one batched program
         rec = bench(n_seeds=19, reps=args.reps or 2, label="sweep1k",
-                    freed_mode=mode, n_shards=args.shards)
+                    freed_mode=mode, n_shards=args.shards,
+                    profile=args.profile)
     if args.json is not None:
         args.json.parent.mkdir(parents=True, exist_ok=True)
         args.json.write_text(json.dumps(rec, indent=2))

@@ -9,7 +9,14 @@ the mesh-agnostic plumbing shared by ``xsim.events.sharded_sweep``:
 
 * ``pad_batch`` — pad a batched pytree's leading axis up to a multiple of
   the shard count (by repeating row 0: a real, runnable scenario, so pad
-  rows never produce NaNs or divergent control flow) + the validity mask;
+  rows never produce NaNs or divergent control flow) + the validity mask.
+  With the drain-aware chunked sweep (``events.simulate``), pad rows
+  participate in the per-device early-exit vote like any other lane: the
+  pad lanes land on the *last* shard, so if scenario 0 drains later than
+  that shard's real rows, padding can extend the last device's chunk
+  count (never its results — drained lanes step as exact no-ops and the
+  pad rows are sliced off). Worst-case waste is unchanged:
+  ``n_shards − 1`` scenario slots;
 * ``shard_spec`` / ``replicated_spec`` — the two PartitionSpecs a fleet
   sweep ever needs;
 * ``unpad`` — slice the gathered result back to the real batch.

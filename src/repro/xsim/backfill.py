@@ -8,9 +8,18 @@ Mirrors ``QueueSim._schedule_pass`` with masked array ops:
      the free cores, so one sort + cumsum starts any number of head jobs.
   2. *Reservation* — when the queue head does not fit, compute its
      earliest feasible start (shadow time) and the spare cores at that
-     moment. This is the hot O(n²) scan over the running-job table; a
-     Pallas kernel (`freed_matrix`) computes it batched on accelerator,
-     with a pure-jnp reference used on CPU.
+     moment. The hot quantity is freed[i] = Σ cores of running jobs
+     ending ≤ end_i; the default path computes it in O(n log n) by
+     sorting the running jobs by end time, cumsum-ing their cores and
+     gathering the cumsum at the last index of each end-time tie run
+     (``_freed_sorted``). The original O(n²) pairwise comparison stays
+     available as ``freed_mode="ref_n2"`` for differential checks — the
+     two agree bit-for-bit on the integer-valued core counts every grid
+     uses (both sums are exact integers below 2**24). A Pallas kernel
+     (`freed_matrix`) runs the same sorted formulation batched on
+     accelerator: XLA sorts the (B, N) tables, the kernel does the O(n)
+     scan portion (cores cumsum + tie-aware backward fill) in VMEM, and
+     the result scatters back through the inverse permutation.
   3. *Backfill loop* — a short `fori_loop`; each pass starts the first
      (FCFS order) queued job that fits now AND either drains before the
      shadow time or fits inside the reservation's spare cores. QueueSim
@@ -31,6 +40,8 @@ from jax.experimental import pallas as pl
 from repro.xsim.state import DONE, QUEUED, RUNNING, ScenarioState
 
 BF_PASSES = 16  # backfill starts per scheduling pass (QueueSim: unbounded)
+
+FREED_MODES = ("ref", "ref_n2", "interpret", "tpu")
 
 
 # ---------------------------------------------------------------- helpers
@@ -53,73 +64,126 @@ def fcfs_order(s: ScenarioState, mask: jax.Array):
     return order, rank
 
 
-# ------------------------------------------------- reservation (the O(n²))
+# ------------------------------------------------- reservation (the scan)
 def _freed_math(ends, cores, running):
-    """freed[i] = cores released once every running job ending ≤ end_i ends."""
+    """O(n²) reference: freed[i] = cores released once every running job
+    ending ≤ end_i ends. Kept behind ``freed_mode="ref_n2"`` so the
+    sorted fast path can always be differentially checked against it."""
     e = jnp.where(running, ends, jnp.inf)
     c = jnp.where(running, cores, 0.0)
     before = (e[None, :] <= e[:, None]) & running[None, :]
     return jnp.sum(jnp.where(before, c[None, :], 0.0), axis=1)
 
 
-def _freed_kernel(ends_ref, cores_ref, run_ref, freed_ref):
-    e = ends_ref[0]
-    r = run_ref[0] > 0
-    c = jnp.where(r, cores_ref[0], 0.0)
-    e = jnp.where(r, e, jnp.inf)
-    before = (e[None, :] <= e[:, None]) & r[None, :]
-    freed_ref[0] = jnp.sum(jnp.where(before, c[None, :], 0.0), axis=1)
+def _freed_sorted(ends, cores, running):
+    """O(n log n) freed-cores scan: argsort + cores-cumsum + tie gather.
+
+    Sort the (masked) end times; the cores cumsum at sorted position k is
+    the total released by the first k+1 enders, so freed[i] is the cumsum
+    at the *last* sorted index whose end ≤ end_i — ``searchsorted(...,
+    side="right") − 1`` lands exactly there, ties included. Non-running
+    rows are masked to end=+inf / cores=0, reproducing the reference's
+    convention (their freed value is the whole running total). Exact (not
+    just close) for integer-valued core counts: both this cumsum and the
+    reference's row-order sum are exact integer arithmetic below 2**24.
+    """
+    e = jnp.where(running, ends, jnp.inf)
+    c = jnp.where(running, cores, 0.0)
+    order = jnp.argsort(e)
+    csum = jnp.cumsum(c[order])
+    cnt = jnp.searchsorted(e[order], e, side="right")  # ≥ 1: e_i is present
+    return csum[cnt - 1]
+
+
+def _freed_sorted_kernel(ends_ref, cores_ref, freed_ref):
+    """Scan portion of the sorted formulation, on PRE-SORTED (1, N) rows.
+
+    freed_sorted[k] must be the cores cumsum at the last index of k's
+    end-time tie run. With ``csum`` nondecreasing, that value is the
+    minimum of ``csum`` over the run-*last* positions at or after k — a
+    suffix-min over ``where(is_last, csum, +inf)``, computed with a
+    log₂(N)-step shift-and-min doubling loop (static slices + concats:
+    no gathers, no negative strides — VPU-friendly and interpretable).
+    """
+    e = ends_ref[...]                      # (1, N), sorted ascending
+    csum = jnp.cumsum(cores_ref[...], axis=-1)
+    n = e.shape[-1]
+    nxt = jnp.concatenate(
+        [e[:, 1:], jnp.full((1, 1), -jnp.inf, e.dtype)], axis=-1)
+    is_last = e != nxt                     # last element of each tie run
+    v = jnp.where(is_last, csum, jnp.inf)
+    k = 1
+    while k < n:                           # static unroll: ⌈log₂ N⌉ steps
+        shifted = jnp.concatenate(
+            [v[:, k:], jnp.full((1, k), jnp.inf, v.dtype)], axis=-1)
+        v = jnp.minimum(v, shifted)
+        k *= 2
+    freed_ref[...] = v
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def freed_matrix(ends, cores, running, *, interpret: bool = False):
-    """Batched Pallas path for `_freed_math`: (B, N) tables → (B, N) freed.
+    """Batched Pallas path for the sorted scan: (B, N) tables → (B, N).
 
-    One grid program per scenario row; the (N, N) end-time comparison
-    matrix lives in VMEM and reduces on the VPU. Used on TPU (or under
-    ``interpret`` for tests); the sweep's default CPU path inlines the
-    jnp reference, keeping `schedule_pass` trivially vmap-able.
+    XLA sorts each row (its sort is the part not worth hand-writing), one
+    grid program per scenario row runs the O(n) cumsum + tie-aware
+    suffix-min in VMEM, and the result scatters back through the inverse
+    permutation. Used on TPU (or under ``interpret`` for tests); the
+    sweep's default CPU path inlines the jnp sorted reference, keeping
+    `schedule_pass` trivially vmap-able. Bit-identical to
+    ``_freed_sorted`` (and to the O(n²) reference on integer cores).
     """
     B, N = ends.shape
-    return pl.pallas_call(
-        _freed_kernel,
+    e = jnp.where(running.astype(bool), ends, jnp.inf).astype(jnp.float32)
+    c = jnp.where(running.astype(bool), cores, 0.0).astype(jnp.float32)
+    order = jnp.argsort(e, axis=1)
+    e_s = jnp.take_along_axis(e, order, axis=1)
+    c_s = jnp.take_along_axis(c, order, axis=1)
+    freed_s = pl.pallas_call(
+        _freed_sorted_kernel,
         grid=(B,),
         in_specs=[
-            pl.BlockSpec((1, N), lambda b: (b, 0)),
             pl.BlockSpec((1, N), lambda b: (b, 0)),
             pl.BlockSpec((1, N), lambda b: (b, 0)),
         ],
         out_specs=pl.BlockSpec((1, N), lambda b: (b, 0)),
         out_shape=jax.ShapeDtypeStruct((B, N), jnp.float32),
         interpret=interpret,
-    )(ends.astype(jnp.float32), cores.astype(jnp.float32),
-      running.astype(jnp.float32))
+    )(e_s, c_s)
+    inv = jnp.argsort(order, axis=1)
+    return jnp.take_along_axis(freed_s, inv, axis=1)
 
 
 def freed_vector(ends, cores, running, *, mode: str = "ref"):
-    """Dispatch the freed-cores scan: jnp reference or the Pallas kernel.
+    """Dispatch the freed-cores scan.
 
-    ``ref``: inline jnp (the CPU default — trivially vmap-able).
-    ``interpret``/``tpu``: the Pallas kernel, run single-scenario; under
-    ``jax.vmap`` the batching rule turns it into the (B, N) grid.
+    ``ref``: the sorted O(n log n) jnp path (the CPU default — trivially
+    vmap-able). ``ref_n2``: the original O(n²) pairwise reference, kept
+    for differential checks. ``interpret``/``tpu``: the sorted Pallas
+    kernel, run single-scenario; under ``jax.vmap`` the batching rule
+    turns it into the (B, N) grid.
     """
     if mode == "ref":
+        return _freed_sorted(ends, cores, running)
+    if mode == "ref_n2":
         return _freed_math(ends, cores, running)
     if mode in ("interpret", "tpu"):
         return freed_matrix(ends[None, :], cores[None, :], running[None, :],
                             interpret=(mode == "interpret"))[0]
-    raise ValueError(f"unknown freed mode {mode!r}")
+    raise ValueError(f"unknown freed mode {mode!r} (want one of "
+                     f"{FREED_MODES})")
 
 
 def reservation(ends, cores, running, free, head_cores, freed=None):
     """EASY reservation: (shadow_time, spare_cores_at_shadow) for the head.
 
-    ``freed`` may be precomputed (e.g. by the Pallas kernel); otherwise the
-    jnp reference is used. Semantics match ``QueueSim._reservation``: walk
-    running jobs by end time until the head fits; no feasible point → +inf.
+    ``freed`` may be precomputed (e.g. by the Pallas kernel); otherwise
+    the sorted jnp path is used. Semantics match
+    ``QueueSim._reservation``: walk running jobs by end time until the
+    head fits; no feasible point → +inf.
     """
     if freed is None:
-        freed = _freed_math(ends, cores, running)
+        freed = _freed_sorted(ends, cores, running)
     e = jnp.where(running, ends, jnp.inf)
     ok = running & (free + freed >= head_cores)
     pick = jnp.argmin(jnp.where(ok, e, jnp.inf))

@@ -40,12 +40,24 @@ per-event dataflow):
   chosen bins are recorded into the ``rl_obs``/``rl_act`` replay
   buffers. ``params=None`` statically elides the branch.
 
-The start/chain hooks process ONE pending stage per scan step (estimator
-updates are inherently sequential: each consumes PRNG state); when more
-than one stage fires at the same instant the ``repass`` flag forces extra
-same-time steps until the pending set drains, preserving the event-driven
-runner's per-event ordering without paying per-stage estimator work on
-every step.
+The start/chain hooks are drained INSIDE one ``sim_step``: a bounded
+inner loop processes one (start, chain) pair per iteration — estimator
+updates are inherently sequential (each consumes PRNG state), so the
+pair-at-a-time order is exactly the order the old repass mechanism
+produced and the cross-validation tests pin action-for-action — but a
+multi-stage same-instant cascade no longer pays a full scan step
+(completion scan + scheduling pass) per stage. The ``repass`` flag
+survives for the one case that genuinely must reschedule mid-instant:
+a naive/RL cancel frees cores (and possibly queues a same-instant
+resubmission), so the drain exits and the next step re-runs the
+scheduling pass at the unchanged ``now``, exactly as before.
+
+``simulate`` runs the scan in K-step chunks under an outer
+``lax.while_loop`` that exits once ``next_event_time`` is +inf — a
+drained scenario stops paying for dead budget steps. Under ``vmap`` the
+exit condition any-reduces across the batch (and per device under
+``sharded_sweep``), and drained lanes step as exact no-ops, so the final
+states stay bit-identical across chunk boundaries and device counts.
 
 ``sweep`` is the single-device fleet program (vmap over the batch);
 ``sharded_sweep`` shard_maps the same program's scenario axis over a 1-D
@@ -153,13 +165,11 @@ def _start_hook(s: ScenarioState, now, bins, naive: bool) -> ScenarioState:
     y = jnp.argmax(pending)                     # lowest pending stage
     row = jnp.clip(s.wf_rows[y], 0, n - 1)
     wait = now - s.submit[row]                  # observed queue wait
-    repass = s.repass | (jnp.sum(pending) > 1)
 
     if not naive:
         return s._replace(
             est=asa.learn_wait_if(s.est, bins, wait, any_p),
             start_pending=pending.at[y].set(False),
-            repass=repass,
         )
 
     yp = jnp.maximum(y - 1, 0)
@@ -205,7 +215,10 @@ def _start_hook(s: ScenarioState, now, bins, naive: bool) -> ScenarioState:
         submit=s.submit.at[row].set(
             jnp.where(do_cancel, resub_t, s.submit[row])),
         free=s.free + jnp.where(do_cancel, s.cores[row], 0.0),
-        repass=repass | do_cancel,
+        # the ONLY remaining repass source: a cancellation changed the
+        # machine (cores freed, row possibly resubmitted at this instant)
+        # and the scheduler must run again before any further hook fires
+        repass=s.repass | do_cancel,
     )
 
 
@@ -320,8 +333,35 @@ def _chain_hook(s: ScenarioState, now, bins, greedy, params=None,
             jnp.where(any_p, ee, s.expected_end[row])),
         submit=s.submit.at[sc].set(
             jnp.where(has_succ, jnp.maximum(now, ee - a1), s.submit[sc])),
-        repass=s.repass | (jnp.sum(pending) > 1),
     )
+
+
+def _drain_hooks(s: ScenarioState, now, bins, greedy, naive: bool,
+                 params, rl_mode: str) -> ScenarioState:
+    """Drain every same-instant pending stage hook inside this step.
+
+    One (start, chain) pair per iteration — the identical hook-call
+    (and therefore PRNG-consumption) order the old one-pair-per-repass-
+    step mechanism produced, minus the full scan step (completion scan +
+    scheduling pass) each extra pair used to cost. The loop is bounded
+    structurally: every iteration clears one ``start_pending`` and/or one
+    ``chain_pending`` bit and never sets new ones (pendings are only
+    raised at step level, from admissions and starts), so it runs at most
+    ``max_stages`` times. A naive/RL cancel sets ``repass`` and exits:
+    the machine changed mid-instant and must be rescheduled (a full
+    same-time step) before later hooks may fire — matching the previous
+    behaviour bit for bit on the cancel paths.
+    """
+    def cond(s: ScenarioState):
+        return (~s.repass) & (jnp.any(s.start_pending)
+                              | jnp.any(s.chain_pending))
+
+    def body(s: ScenarioState):
+        s = _start_hook(s, now, bins, naive)     # learn (+ naive miss) …
+        return _chain_hook(s, now, bins, greedy, params, rl_mode)
+        # … then predict, as the event-driven sim does
+
+    return jax.lax.while_loop(cond, body, s)
 
 
 def sim_step(s: ScenarioState, bins, *, bf_passes: int = backfill.BF_PASSES,
@@ -345,7 +385,10 @@ def sim_step(s: ScenarioState, bins, *, bf_passes: int = backfill.BF_PASSES,
     now = jnp.where(jnp.isfinite(nxt), jnp.maximum(nxt, s.t), s.t)
     # utilization integral over (t, now] at the pre-event allocation
     busy_cs = s.busy_cs + (s.total - s.free) * (now - s.t)
-    s = s._replace(t=now, busy_cs=busy_cs, repass=jnp.asarray(False))
+    s = s._replace(t=now, busy_cs=busy_cs, repass=jnp.asarray(False),
+                   # drained lanes don't count: `steps` is the
+                   # events-executed profile signal vs. the n_steps budget
+                   steps=s.steps + jnp.isfinite(nxt).astype(jnp.int32))
     s, newly_done = complete_jobs(s, now)
     s = _release_per_stage(s, newly_done, now)
     if naive:
@@ -362,20 +405,39 @@ def sim_step(s: ScenarioState, bins, *, bf_passes: int = backfill.BF_PASSES,
     started = (s.status == RUNNING) & jnp.isinf(pre_start)
     s = s._replace(start_pending=s.start_pending | (
         stage_ok & started[rows]))
-    s = _start_hook(s, now, bins, naive)     # learn (+ naive miss) first …
-    return _chain_hook(s, now, bins, greedy, params, rl_mode)
-    # … then predict, as the event-driven sim does
+    return _drain_hooks(s, now, bins, greedy, naive, params, rl_mode)
+
+
+CHUNK_STEPS = 8  # scan-chunk size between drain checks (see `simulate`)
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("n_steps", "bf_passes", "freed_mode",
-                                    "pred_mode", "naive", "rl_mode"))
+                   static_argnames=("n_steps", "chunk_steps", "bf_passes",
+                                    "freed_mode", "pred_mode", "naive",
+                                    "rl_mode"))
 def simulate(s: ScenarioState, *, n_steps: int,
+             chunk_steps: int = CHUNK_STEPS,
              bf_passes: int = backfill.BF_PASSES,
              freed_mode: str = "ref", pred_mode: str | None = None,
              naive: bool = True, params=None,
              rl_mode: str = "sample") -> ScenarioState:
-    """Run ``n_steps`` event steps (idempotent once events are drained)."""
+    """Run up to ~``n_steps`` event steps, stopping early once drained.
+
+    The scan is split into a static ``n_steps % chunk_steps`` remainder
+    scan (run first, while there is certainly work) followed by
+    ``chunk_steps``-step chunks under an outer ``lax.while_loop`` that
+    exits as soon as ``next_event_time`` hits +inf — a drained scenario
+    stops paying for dead budget steps, and at most exactly ``n_steps``
+    steps ever run. A drained ``sim_step`` is an exact no-op (time,
+    PRNG, every table field), so the early exit cannot change the
+    result: final states are bit-identical to the unchunked program for
+    every chunk size — in the truncation regime too, where both run
+    exactly ``n_steps`` steps in the same order — and under
+    ``vmap``/``shard_map`` (where the exit condition any-reduces over
+    the per-device batch) for every device count. ``chunk_steps=0``
+    disables chunking: one static ``n_steps`` scan, the pre-chunking
+    program.
+    """
     m = s.est.log_p.shape[-1]
     bins = jnp.asarray(make_bins(m), jnp.float32)
 
@@ -384,14 +446,33 @@ def simulate(s: ScenarioState, *, n_steps: int,
                         pred_mode=pred_mode, naive=naive, params=params,
                         rl_mode=rl_mode), None
 
-    s, _ = jax.lax.scan(body, s, None, length=n_steps)
+    if chunk_steps <= 0:
+        s, _ = jax.lax.scan(body, s, None, length=n_steps)
+        return s
+
+    n_chunks, rem = divmod(n_steps, chunk_steps)
+    if rem:
+        s, _ = jax.lax.scan(body, s, None, length=rem)
+
+    def chunk_cond(carry):
+        s, i = carry
+        return (i < n_chunks) & jnp.isfinite(next_event_time(s, naive))
+
+    def chunk_body(carry):
+        s, i = carry
+        s, _ = jax.lax.scan(body, s, None, length=chunk_steps)
+        return s, i + 1
+
+    s, _ = jax.lax.while_loop(chunk_cond, chunk_body, (s, jnp.int32(0)))
     return s
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("n_steps", "bf_passes", "freed_mode",
-                                    "pred_mode", "naive", "rl_mode"))
+                   static_argnames=("n_steps", "chunk_steps", "bf_passes",
+                                    "freed_mode", "pred_mode", "naive",
+                                    "rl_mode"))
 def sweep(batched: ScenarioState, *, n_steps: int,
+          chunk_steps: int = CHUNK_STEPS,
           bf_passes: int = backfill.BF_PASSES,
           freed_mode: str = "ref", pred_mode: str | None = None,
           naive: bool = True, params=None,
@@ -401,32 +482,38 @@ def sweep(batched: ScenarioState, *, n_steps: int,
     ``freed_mode="tpu"`` routes the reservation scan through the Pallas
     kernel (vmap batches it into one (B, N) grid program). ``params``
     (the learned policy head's weights) is closed over, so it broadcasts
-    across the fleet rather than being vmapped.
+    across the fleet rather than being vmapped. The chunked drain exit
+    any-reduces over the batch: the sweep stops as soon as EVERY scenario
+    is out of events.
     """
     return jax.vmap(
-        lambda s: simulate(s, n_steps=n_steps, bf_passes=bf_passes,
-                           freed_mode=freed_mode, pred_mode=pred_mode,
-                           naive=naive, params=params, rl_mode=rl_mode)
+        lambda s: simulate(s, n_steps=n_steps, chunk_steps=chunk_steps,
+                           bf_passes=bf_passes, freed_mode=freed_mode,
+                           pred_mode=pred_mode, naive=naive, params=params,
+                           rl_mode=rl_mode)
     )(batched)
 
 
 @functools.lru_cache(maxsize=None)
-def _sharded_sweep_fn(mesh, n_steps, bf_passes, freed_mode, pred_mode,
-                      naive, rl_mode, with_params):
+def _sharded_sweep_fn(mesh, n_steps, chunk_steps, bf_passes, freed_mode,
+                      pred_mode, naive, rl_mode, with_params):
     """Compiled shard_map(sweep) for one (mesh, static-config) cell.
 
     Cached so repeated sweeps (warm_fleet rounds, RL iterations, bench
     reps) reuse one jitted program — the same role ``jax.jit``'s own
-    cache plays on the vmap path.
+    cache plays on the vmap path. ``chunk_steps`` is part of the key:
+    each chunking choice is its own compiled program (the early-exit
+    while_loop structure depends on it).
     """
     from repro.parallel import fleet as pfleet
 
     spec = pfleet.shard_spec()
 
     def block(shard: ScenarioState, params):
-        return sweep(shard, n_steps=n_steps, bf_passes=bf_passes,
-                     freed_mode=freed_mode, pred_mode=pred_mode,
-                     naive=naive, params=params, rl_mode=rl_mode)
+        return sweep(shard, n_steps=n_steps, chunk_steps=chunk_steps,
+                     bf_passes=bf_passes, freed_mode=freed_mode,
+                     pred_mode=pred_mode, naive=naive, params=params,
+                     rl_mode=rl_mode)
 
     if with_params:
         fn = shard_map(block, mesh=mesh,
@@ -439,6 +526,7 @@ def _sharded_sweep_fn(mesh, n_steps, bf_passes, freed_mode, pred_mode,
 
 
 def sharded_sweep(batched: ScenarioState, *, mesh, n_steps: int,
+                  chunk_steps: int = CHUNK_STEPS,
                   bf_passes: int = backfill.BF_PASSES,
                   freed_mode: str = "ref", pred_mode: str | None = None,
                   naive: bool = True, params=None,
@@ -448,10 +536,14 @@ def sharded_sweep(batched: ScenarioState, *, mesh, n_steps: int,
     Each device runs the plain vmapped program on its contiguous block of
     scenarios (``params`` replicated), so the gathered result is
     bit-identical to the single-device ``sweep`` — pinned by
-    tests/test_xsim_sharded.py. Batch sizes not divisible by the shard
-    count are padded with copies of scenario 0 (a valid row, so the pad
-    lanes run the same control flow) and the pad rows are sliced off the
-    gathered output. Build the mesh with
+    tests/test_xsim_sharded.py. The chunked drain exit is *per device*
+    (each block's while_loop any-reduces over its own lanes): a device
+    whose scenarios drain early stops stepping while busier devices run
+    on, and because drained steps are exact no-ops the gathered result
+    still matches the vmap path bit for bit. Batch sizes not divisible by
+    the shard count are padded with copies of scenario 0 (a valid row, so
+    the pad lanes run the same control flow) and the pad rows are sliced
+    off the gathered output. Build the mesh with
     ``repro.launch.mesh.make_scenarios_mesh``.
     """
     from repro.parallel import fleet as pfleet
@@ -459,7 +551,8 @@ def sharded_sweep(batched: ScenarioState, *, mesh, n_steps: int,
     n_shards = mesh.shape[pfleet.SCENARIO_AXIS]
     b = pfleet.batch_size(batched)
     padded, _mask = pfleet.pad_batch(batched, n_shards)
-    fn = _sharded_sweep_fn(mesh, n_steps, bf_passes, freed_mode, pred_mode,
-                           naive, rl_mode, params is not None)
+    fn = _sharded_sweep_fn(mesh, n_steps, chunk_steps, bf_passes,
+                           freed_mode, pred_mode, naive, rl_mode,
+                           params is not None)
     out = fn(padded, params) if params is not None else fn(padded)
     return pfleet.unpad(out, b)

@@ -77,10 +77,17 @@ class XSimConfig:
     #   within the run; i.i.d. draws from a still-multi-modal p can delay
     #   a successor by the full bin gap. "sample" matches the event-driven
     #   tuned runner call-for-call (cross-validation uses state.freeze).
+    chunk_steps: int = 8     # scan-chunk size between drain-exit checks
+    #   (events.simulate): smaller = finer early exit, larger = fewer
+    #   while_loop round-trips; 0 disables chunking (one static scan).
+    #   Bit-identical results for every value — drained steps are no-ops.
 
     def __post_init__(self) -> None:
         if self.pred_mode not in ("greedy", "sample"):
             raise ValueError(f"unknown pred_mode {self.pred_mode!r}")
+        if self.chunk_steps < 0:
+            raise ValueError(f"chunk_steps must be >= 0, got "
+                             f"{self.chunk_steps}")
 
     @property
     def max_jobs(self) -> int:
@@ -88,9 +95,19 @@ class XSimConfig:
 
     @property
     def n_steps(self) -> int:
-        """Safe event budget: admissions batch, ends are distinct, each
-        workflow stage adds a short same-time cascade."""
-        return 2 * self.max_jobs + 6 * self.max_stages + 16
+        """Safe event budget: each job costs at most one admission step
+        and one completion step (same-instant admissions batch, and the
+        in-step hook drain absorbs whole stage cascades into their
+        admission step), plus the naive cancel/resubmit detours — every
+        stage can cancel at most once, and a cancel adds one repass step
+        plus one same-instant resubmission-admission step, hence the
+        ``2·max_stages`` slack (+16 base cushion). The old
+        ``6·max_stages`` same-instant-cascade term is gone — that is the
+        step-budget half of the event-bound optimization — and the
+        chunked drain exit makes any remaining overcount nearly free
+        (drained scenarios stop stepping, so only truly long scenarios
+        ever touch the budget tail)."""
+        return 2 * self.max_jobs + 2 * self.max_stages + 16
 
 
 def build_scenario(key: jax.Array, center: XCenter, wf_cores: jax.Array,
@@ -212,6 +229,7 @@ def build_scenario(key: jax.Array, center: XCenter, wf_cores: jax.Array,
         oh_cs=jnp.float32(0.0), misses=jnp.int32(0),
         repass=jnp.asarray(False),
         pred_greedy=jnp.asarray(cfg.pred_mode == "greedy"),
+        steps=jnp.int32(0),
     )
 
 
@@ -355,9 +373,10 @@ def run_grid(grid: ScenarioGrid, fleet=None, *, pred_seed: int = 1,
     states = grid.build(ests)
     # RL shares ASA-Naive's no-dependency world (cancel/resubmit machinery)
     has_naive = bool(np.any((pols == ASA_NAIVE) | (pols == RL)))
-    kw = dict(n_steps=grid.cfg.n_steps, bf_passes=bf_passes,
-              freed_mode=freed_mode, pred_mode=grid.cfg.pred_mode,
-              naive=has_naive, params=params, rl_mode=rl_mode)
+    kw = dict(n_steps=grid.cfg.n_steps, chunk_steps=grid.cfg.chunk_steps,
+              bf_passes=bf_passes, freed_mode=freed_mode,
+              pred_mode=grid.cfg.pred_mode, naive=has_naive, params=params,
+              rl_mode=rl_mode)
     if mesh is None:
         final = events.sweep(states, **kw)
     else:

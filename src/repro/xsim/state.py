@@ -106,6 +106,8 @@ class ScenarioState(NamedTuple):
     misses: jax.Array       # i32 () naive early-start (misprediction) count
     repass: jax.Array       # bool () force an extra same-time step next
     pred_greedy: jax.Array  # bool () MAP (consistent) vs line-4 sampled a_y
+    steps: jax.Array        # i32 () event steps executed (drained no-ops
+    #   don't count) — the budget-vs-event profile signal
 
 
 def empty_table(max_jobs: int) -> dict[str, np.ndarray]:
@@ -172,6 +174,7 @@ def freeze(table: dict[str, np.ndarray], *, total_cores: float,
         misses=jnp.int32(0),
         repass=jnp.asarray(False),
         pred_greedy=jnp.asarray(pred_mode == "greedy"),
+        steps=jnp.int32(0),
     )
 
 

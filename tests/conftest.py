@@ -7,7 +7,8 @@ available we use it untouched; otherwise we install a tiny deterministic
 stand-in that replays each ``@given`` test over a fixed set of drawn
 examples (endpoints first, then seeded random draws). It covers exactly
 the API surface the test-suite uses: ``given``, ``settings``,
-``strategies.integers`` and ``strategies.floats``.
+``strategies.integers``, ``strategies.floats`` and
+``strategies.booleans``.
 """
 
 from __future__ import annotations
@@ -35,6 +36,12 @@ except ModuleNotFoundError:
         return _Strategy(
             (float(min_value), float(max_value)),
             lambda rng: float(rng.uniform(min_value, max_value)),
+        )
+
+    def _booleans():
+        return _Strategy(
+            (False, True),
+            lambda rng: bool(rng.integers(0, 2)),
         )
 
     def _settings(max_examples: int = 10, deadline=None, **_kw):
@@ -71,6 +78,7 @@ except ModuleNotFoundError:
     strategies = types.ModuleType("hypothesis.strategies")
     strategies.integers = _integers
     strategies.floats = _floats
+    strategies.booleans = _booleans
     stub.given = _given
     stub.settings = _settings
     stub.strategies = strategies

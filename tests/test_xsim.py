@@ -234,14 +234,59 @@ def test_dependency_blocks_start():
 
 
 def test_pallas_reservation_matches_reference():
+    """Sorted jnp path and sorted Pallas kernel == the O(n²) reference,
+    exactly — including duplicated end times (tie runs)."""
     rng = np.random.default_rng(3)
     B, N = 3, 128
     ends = jnp.asarray(rng.uniform(0, 1e4, (B, N)), jnp.float32)
+    ends = ends.at[:, ::4].set(5000.0)          # force ties
     cores = jnp.asarray(rng.integers(1, 50, (B, N)), jnp.float32)
     running = jnp.asarray(rng.random((B, N)) < 0.5)
     ref = jax.vmap(backfill._freed_math)(ends, cores, running)
+    srt = jax.vmap(backfill._freed_sorted)(ends, cores, running)
     ker = backfill.freed_matrix(ends, cores, running, interpret=True)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(srt))
     np.testing.assert_array_equal(np.asarray(ref), np.asarray(ker))
+
+
+def test_chunked_simulate_respects_step_budget():
+    """Chunked and unchunked simulate are bitwise identical in BOTH
+    regimes: drained (extra chunk steps are no-ops) and truncated (the
+    while_loop runs ⌊n_steps/chunk⌋ chunks plus a static remainder scan,
+    never granting more than exactly ``n_steps`` steps — a budget that
+    is not a chunk multiple must not be rounded up)."""
+    t, kw = _bare()
+    for i, sub in enumerate((0.0, 500.0, 1000.0, 1500.0, 2000.0)):
+        add_job(t, i, cores=60, duration=100.0, submit=sub,
+                status=X.PENDING)
+    st = freeze(t, **kw)
+    # truncation regime: 3 steps of budget, chunk default 8, events left
+    a = events.simulate(st, n_steps=3, chunk_steps=0)
+    b = events.simulate(st, n_steps=3)
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    assert int(b.steps) == 3
+    # drained regime: every chunk size reproduces the static scan
+    c = events.simulate(st, n_steps=40, chunk_steps=0)
+    for k in (1, 8, 64):
+        d = events.simulate(st, n_steps=40, chunk_steps=k)
+        for x, y in zip(jax.tree.leaves(c), jax.tree.leaves(d)):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_freed_mode_ref_n2_end_to_end():
+    """The sorted default and the retained O(n²) reference drive bitwise
+    identical simulations (the reservation rework is numerically
+    invisible on the integer-core tables the engine uses)."""
+    t, kw = _bare()
+    policies.add_workflow(t, 0, MONTAGE, 28, X.PER_STAGE, t0=0.0)
+    st = freeze(t, policy=X.PER_STAGE, total_cores=100.0, free_cores=100.0)
+    a = events.simulate(st, n_steps=48)
+    b = events.simulate(st, n_steps=48, freed_mode="ref_n2")
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    with pytest.raises(ValueError, match="freed mode"):
+        events.simulate(st, n_steps=8, freed_mode="bogus")
 
 
 def test_pallas_freed_mode_end_to_end():

@@ -30,7 +30,7 @@ import jax.numpy as jnp
 
 from repro.core.bins import make_bins
 from repro.sched.workflows import BLAST, MONTAGE, STATISTICS
-from repro.xsim import events, policies
+from repro.xsim import backfill, events, policies
 from repro.xsim import state as X
 from repro.xsim.grid import XSimConfig, make_grid, run_grid
 from repro.xsim.state import add_job, empty_table, freeze
@@ -128,6 +128,31 @@ def test_invariants_hold_at_every_step(seed, policy_i, fill):
     assert abs(float(jax.nn.logsumexp(s.est.log_p))) < 1e-3
 
 
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 64),
+       st.booleans())
+def test_sorted_freed_matches_n2_reference_exactly(seed, n, force_ties):
+    """The O(n log n) sorted reservation == the O(n²) pairwise reference,
+    bit for bit, on random integer-core job tables — end-time ties (the
+    searchsorted side="right" case) and non-running rows included. Core
+    counts are integer-valued in every grid, so both the sorted cumsum
+    and the reference's row-order sum are exact integer arithmetic and
+    the two formulations must agree EXACTLY, not approximately."""
+    rng = np.random.default_rng(seed)
+    if force_ties:
+        # few distinct end times over many rows ⇒ guaranteed tie runs
+        ends = rng.choice([60.0, 600.0, 600.0, 3600.0, 86400.0], size=n)
+    else:
+        ends = rng.uniform(0.0, 1e5, n)
+    cores = rng.integers(1, 512, n).astype(np.float32)
+    running = rng.random(n) < 0.7
+    ref = backfill._freed_math(jnp.asarray(ends, jnp.float32),
+                               jnp.asarray(cores), jnp.asarray(running))
+    fast = backfill._freed_sorted(jnp.asarray(ends, jnp.float32),
+                                  jnp.asarray(cores), jnp.asarray(running))
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(fast))
+
+
 _GRID_CFG = XSimConfig(n_warm=8, n_backlog=6, n_arrivals=8, max_stages=9,
                        t0=1800.0)
 
@@ -153,3 +178,28 @@ def test_grid_sweep_invariants(seed):
     pol = np.asarray(m["policy"])
     assert np.all(oh[pol != X.ASA_NAIVE] == 0.0)
     assert np.all(oh >= 0.0)
+
+
+def test_full_grid_drains_within_budget():
+    """Every scenario of a full default ``make_grid`` sweep (all centers,
+    scales, workflows and the naive cancel/resubmit policy included) must
+    have ``next_event_time == +inf`` at budget end — i.e. the tightened
+    ``n_steps`` formula (2·max_jobs + 2·max_stages + 16: the 6·max_stages
+    cascade term absorbed by the in-step hook drain, the surviving slack
+    covering worst-case cancel detours) silently truncates NOTHING. The
+    per-scenario ``steps`` counter must also sit strictly below the
+    budget for at least some scenarios (the event-bound signal the
+    ``--profile`` record tracks) and never above it."""
+    cfg = XSimConfig(n_warm=16, n_backlog=12, n_arrivals=16, max_stages=9,
+                     t0=3600.0)
+    grid = make_grid(cfg, n_seeds=2, shrink=1 / 64.0,
+                     policy_ids=(0, 1, 2, 3))
+    final, m = run_grid(grid)
+    nxt = np.asarray(jax.jit(jax.vmap(events.next_event_time))(final))
+    assert np.all(np.isinf(nxt)), (
+        f"{int(np.sum(np.isfinite(nxt)))} scenarios still had events at "
+        f"budget end (n_steps={cfg.n_steps})")
+    assert np.all(np.asarray(m["wf_done"]) == np.asarray(m["wf_total"]))
+    steps = np.asarray(final.steps)
+    assert int(steps.max()) <= cfg.n_steps
+    assert float(steps.mean()) < cfg.n_steps  # budget-bound no more

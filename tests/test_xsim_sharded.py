@@ -117,6 +117,36 @@ def test_sharded_run_grid_bit_identical(k):
     assert_trees_equal(m0, mk)
 
 
+@pytest.mark.parametrize("k", [1, 2, 4, 8])
+def test_chunked_early_exit_bit_identical_across_shards(k):
+    """The drain-aware chunked sweep exits per *device* (each shard's
+    while_loop any-reduces over its own lanes), so devices holding
+    quick-draining scenarios run fewer chunks than busy ones — and the
+    gathered result must STILL be bit-identical to the single-device
+    vmap, for every shard count. The grid deliberately mixes a
+    single-stage probe workflow with montage so per-scenario event
+    counts (and therefore per-shard chunk counts) differ wildly."""
+    if N_DEV < k:
+        pytest.skip(f"needs {k} devices, have {N_DEV} (set XLA_FLAGS="
+                    "--xla_force_host_platform_device_count=8)")
+    from repro.sched.workflows import Stage, Workflow
+
+    probe = Workflow("probe1", (Stage("only", True, 600.0, 0.5),))
+    cfg = tiny_cfg(pred_mode="sample")
+    grid = make_grid(cfg, center_names=("hpc2n",),
+                     workflows=(probe, "montage"),
+                     policy_ids=(PER_STAGE, ASA, ASA_NAIVE), n_seeds=1,
+                     shrink=1 / 64.0)           # B = 18: pads on k = 4, 8
+    fleet = policies.init_fleet(int(grid.geo_idx.max()) + 1)
+    f0, m0 = run_grid(grid, fleet, pred_seed=9)
+    # heterogeneous drain times: the early exit has real work to skip
+    steps = np.asarray(f0.steps)
+    assert int(steps.max()) > int(steps.min())
+    fk, mk = run_grid(grid, fleet, pred_seed=9, n_shards=k)
+    assert_trees_equal(f0, fk)                  # incl. the steps counters
+    assert_trees_equal(m0, mk)
+
+
 @needs(N_DEV < 2, reason="needs ≥2 devices")
 def test_sharded_nondivisible_batch_padding_mask():
     cfg = tiny_cfg()
