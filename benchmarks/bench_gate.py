@@ -1,24 +1,32 @@
 """Bench-trajectory regression gate for the xsim throughput matrix.
 
 Collects the per-leg ``xsim_throughput_*.json`` records the CI matrix
-uploads (ref / interpret / sharded), merges them into one
+uploads (ref / interpret / sharded / traced), merges them into one
 ``BENCH_xsim.json`` artifact — the per-commit point of the throughput
-trajectory, including each leg's ``--profile`` breakdown (steps executed
-vs. budget, chunks run, compile/steady split) when present — and FAILS
-(exit 1) when the ref-mode single-device scenarios/sec drops more than
-``--tolerance`` (default 25%) below the committed baseline in
-``benchmarks/baselines/xsim_throughput.json``, or when its
-us_per_scenario exceeds the mirrored ceiling (baseline ÷ (1 −
+trajectory — and FAILS (exit 1) when the ref-mode single-device
+scenarios/sec drops more than ``--tolerance`` (default 25%) below the
+committed baseline in ``benchmarks/baselines/xsim_throughput.json``, or
+when its us_per_scenario exceeds the mirrored ceiling (baseline ÷ (1 −
 tolerance) — the two fields are reciprocal, so both checks trip at the
 same throughput).
 
+Legs are schema-v1 ``repro.obs.telemetry`` records (the only format the
+runners emit since the observability PR): the gated numbers live in the
+``profile`` section, fleet counters in ``metrics``, ring accounting in
+``trace``. A leg that fails schema validation — a missing ``profile``
+section above all — is a NAMED failure, not a KeyError and not a silent
+skip. Pre-telemetry flat records are still merged (old artifacts
+replayed through the gate) but new leg files must validate.
+
 Only the ref-mode vmap leg is gated: the interpret leg measures the
 Pallas kernel under the (slow, deliberately unoptimized) interpreter,
-and the sharded leg splits one CI core across 8 fake devices — both are
-trajectory signals, not regression gates.
+the sharded leg splits one CI core across 8 fake devices, and the traced
+leg pays the ring-append overhead — all trajectory signals, not
+regression gates.
 
 Pure stdlib on purpose: the CI gate job runs it straight from a
-checkout, no jax install.
+checkout, no jax install (``repro.obs.telemetry`` is stdlib-only and
+imported via the repo's ``src/`` path).
 
   python -m benchmarks.bench_gate --bench-dir bench-artifacts \
       --out BENCH_xsim.json
@@ -31,32 +39,72 @@ import json
 import sys
 from pathlib import Path
 
+# bench_gate runs from a bare checkout (no pip install): reach the
+# stdlib-only repro.obs.telemetry through the source tree directly
+_SRC = Path(__file__).resolve().parent.parent / "src"
+if str(_SRC) not in sys.path:
+    sys.path.insert(0, str(_SRC))
+
+from repro.obs import telemetry  # noqa: E402  (needs the path shim)
+
 BASELINE_DEFAULT = Path(__file__).resolve().parent / "baselines" \
     / "xsim_throughput.json"
 
 
-def leg_key(rec: dict) -> str:
-    """Stable merge key: freed_mode, plus the shard count when sharded."""
-    shards = int(rec.get("n_shards", 1) or 1)
-    mode = rec.get("freed_mode", "unknown")
-    return mode if shards == 1 else f"{mode}-shards{shards}"
+def leg_key(leg: dict) -> str:
+    """Stable merge key: freed_mode, plus shard count / traced markers."""
+    shards = int(leg.get("n_shards", 1) or 1)
+    mode = leg.get("freed_mode", "unknown")
+    key = mode if shards == 1 else f"{mode}-shards{shards}"
+    return f"{key}-traced" if leg.get("traced") else key
 
 
-def collect_legs(bench_dir: Path) -> dict[str, dict]:
+def _leg_view(rec: dict) -> dict:
+    """Normalize one record into the flat leg view the gate consumes.
+
+    Telemetry records are validated and flattened
+    (``telemetry.throughput_leg``); a schema violation raises ValueError
+    naming the problem — the caller turns it into a per-leg failure.
+    Pre-telemetry flat records pass through as-is.
+    """
+    if telemetry.is_telemetry(rec):
+        leg = telemetry.throughput_leg(rec)
+        leg["profile"] = rec["profile"]
+        leg["metrics"] = rec.get("metrics")
+        leg["trace"] = rec.get("trace")
+        for k in ("n_scenarios", "backend"):
+            if k in rec["run"]:
+                leg[k] = rec["run"][k]
+        return leg
+    if "scenarios_per_sec" not in rec:
+        raise ValueError("neither a telemetry record (telemetry_version) "
+                         "nor a flat record with scenarios_per_sec")
+    return rec
+
+
+def collect_legs(bench_dir: Path) -> tuple[dict[str, dict], list[str]]:
+    """(legs, failures): merged leg views + per-file schema failures."""
     legs: dict[str, dict] = {}
+    failures: list[str] = []
     for path in sorted(bench_dir.rglob("xsim_throughput*.json")):
         try:
             rec = json.loads(path.read_text())
         except (OSError, json.JSONDecodeError) as e:
-            print(f"bench_gate: skipping unreadable {path}: {e}",
-                  file=sys.stderr)
+            failures.append(f"leg file {path} is unreadable: {e}")
             continue
-        if "scenarios_per_sec" not in rec:
-            print(f"bench_gate: skipping {path}: no scenarios_per_sec",
-                  file=sys.stderr)
+        try:
+            leg = _leg_view(rec)
+        except ValueError as e:
+            # name the broken leg precisely — a matrix leg must never
+            # fail the schema silently (nor as a KeyError downstream)
+            run = rec.get("run", {}) if isinstance(rec, dict) else {}
+            label = run.get("label") or rec.get("label") or path.name
+            key = leg_key({**rec, **run}) if isinstance(rec, dict) else "?"
+            failures.append(f"leg {key!r} ({label}, {path}) failed "
+                            f"telemetry validation: {e}")
             continue
-        legs[leg_key(rec)] = rec
-    return legs
+        legs[leg_key(leg)] = leg
+    return legs, failures
 
 
 def gate(legs: dict[str, dict], baseline: dict,
@@ -137,12 +185,14 @@ def main() -> int:
     args = ap.parse_args()
 
     baseline = json.loads(args.baseline.read_text())
-    legs = collect_legs(args.bench_dir)
-    if not legs:
+    legs, schema_failures = collect_legs(args.bench_dir)
+    if not legs and not schema_failures:
         print(f"bench_gate: no xsim_throughput*.json under "
               f"{args.bench_dir}", file=sys.stderr)
         return 1
     gate_rec, failures = gate(legs, baseline, args.tolerance)
+    failures = schema_failures + failures
+    gate_rec["ok"] = not failures
 
     merged = {"legs": legs, "baseline": baseline, "gate": gate_rec}
     args.out.parent.mkdir(parents=True, exist_ok=True)
@@ -157,7 +207,7 @@ def main() -> int:
         prof = rec.get("profile")
         if prof:
             # budget-bound → event-bound trajectory signal (see
-            # xsim_throughput --profile): steps the engine actually ran
+            # xsim_throughput telemetry): steps the engine actually ran
             # vs the static n_steps budget, and the chunked-drain shape
             print(f"bench_gate/{key}/profile: "
                   f"steps {prof.get('steps_executed_max')} max / "
@@ -168,6 +218,13 @@ def main() -> int:
                   f"drained {prof.get('drained_frac', 0):.3f}, "
                   f"compile {prof.get('compile_s', 0):.1f}s / steady "
                   f"{prof.get('steady_s', 0):.2f}s")
+            if "trace_overhead_frac" in prof:
+                tr = rec.get("trace") or {}
+                print(f"bench_gate/{key}/trace: "
+                      f"overhead {prof['trace_overhead_frac']:+.1%}, "
+                      f"events {tr.get('events_total')} "
+                      f"(dropped {tr.get('events_dropped', 0)}, "
+                      f"capacity {tr.get('capacity')}/scenario)")
     if failures:
         for f in failures:
             print(f"bench_gate: FAIL {f}", file=sys.stderr)

@@ -5,7 +5,9 @@ five-strategy comparison grid (BigJob / Per-Stage / ASA / ASA-Naive /
 learned head, greedy actions). Prints ``name,us_per_call,derived`` CSV
 rows (benchmarks/run.py convention) and — the CI ``rl-smoke`` contract —
 **exits non-zero unless the trained head improves on the init policy's
-held-out reward**. ``--json`` writes the reward curve + eval record (the
+held-out reward**. ``--json`` writes a schema-v1 ``repro.obs.telemetry``
+record (kind ``rl_train``): reward curve, held-out eval, and the
+per-iteration fleet counters from ``TrainResult.telemetry`` (the
 artifact uploaded next to the bench-trajectory JSON).
 
   python -m benchmarks.rl_train --smoke          # CI-sized: 3 iterations
@@ -94,23 +96,30 @@ def main() -> None:
           f"beats_per_stage={vs_ps};within_15pct_asa={vs_asa}")
 
     if args.json is not None:
+        from repro.obs import telemetry
+
+        rec = telemetry.record(
+            "rl_train",
+            run={"label": "smoke" if args.smoke else "full",
+                 "iters": cfg.iters, "lr": cfg.lr,
+                 "n_seeds": cfg.n_seeds, "hidden": cfg.hidden,
+                 "oh_weight": cfg.oh_weight, "seed": cfg.seed,
+                 "smoke": bool(args.smoke), "n_shards": cfg.n_shards,
+                 "eval_seed": args.eval_seed},
+            profile={"train_s": train_s, "eval_s": eval_s,
+                     "us_per_iter": us_per_iter},
+            metrics={"rewards": res.rewards,
+                     "entropies": res.entropies,
+                     # per-iteration fleet observability counters
+                     # (repro.obs.metrics over each rollout batch)
+                     "iterations": res.telemetry,
+                     "eval": ev, "init_eval": ev0,
+                     "checks": {"improved": improved,
+                                "beats_per_stage": vs_ps,
+                                "within_15pct_asa": vs_asa}},
+        )
         args.json.parent.mkdir(parents=True, exist_ok=True)
-        args.json.write_text(json.dumps({
-            "config": {"iters": cfg.iters, "lr": cfg.lr,
-                       "n_seeds": cfg.n_seeds, "hidden": cfg.hidden,
-                       "oh_weight": cfg.oh_weight, "seed": cfg.seed,
-                       "smoke": bool(args.smoke),
-                       "n_shards": cfg.n_shards,
-                       "eval_seed": args.eval_seed},
-            "rewards": res.rewards,
-            "entropies": res.entropies,
-            "train_s": train_s,
-            "eval_s": eval_s,
-            "eval": ev,
-            "init_eval": ev0,
-            "checks": {"improved": improved, "beats_per_stage": vs_ps,
-                       "within_15pct_asa": vs_asa},
-        }, indent=2))
+        args.json.write_text(json.dumps(rec, indent=2))
 
     if not improved:
         sys.exit("rl_train: trained policy did not improve on the init "

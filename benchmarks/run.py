@@ -58,7 +58,9 @@ def dryrun_summary() -> None:
 
 def xsim_main(n_seeds: int = 4, include_naive: bool = False,
               include_rl: bool = False,
-              n_shards: int | None = None) -> None:
+              n_shards: int | None = None,
+              trace_path: Path | None = None,
+              json_path: Path | None = None) -> None:
     """Strategy comparison on the batched engine + its throughput row.
 
     ``include_naive`` adds the §4.5 ASA-Naive (cancel/resubmit) policy to
@@ -68,17 +70,29 @@ def xsim_main(n_seeds: int = 4, include_naive: bool = False,
     and adds it to the sweep as policy id 4 (greedy actions).
     ``n_shards`` shard_maps the scenario axis over that many devices
     (validated against the inventory at the command line).
+    ``trace_path`` runs the sweep with per-scenario event rings enabled
+    and exports them as a Chrome trace (one track per scenario — this is
+    the multi-policy trace the Perfetto acceptance check opens);
+    ``json_path`` writes the ``xsim_strategies`` telemetry record.
     """
     import time
 
+    import jax
     import numpy as np
 
+    from repro.obs import export as obs_export
+    from repro.obs import metrics as obs_metrics
+    from repro.obs import telemetry
     from repro.xsim import policies
     from repro.xsim.grid import XSimConfig, make_grid, run_grid, warm_fleet
     from repro.xsim.state import ASA, ASA_NAIVE, BIGJOB, PER_STAGE, RL
 
     cfg = XSimConfig(n_warm=24, n_backlog=16, n_arrivals=24, max_stages=9,
                      t0=3600.0)
+    if trace_path is not None:
+        # the strategies sweep is a trajectory signal, not a gated bench:
+        # tracing rides the one timed pass instead of paying a second one
+        cfg = cfg.with_trace()
     policy_ids = (BIGJOB, PER_STAGE, ASA)
     if include_naive:
         policy_ids += (ASA_NAIVE,)
@@ -97,8 +111,8 @@ def xsim_main(n_seeds: int = 4, include_naive: bool = False,
     fleet = warm_fleet(fleet, grid, rounds=3, params=params,
                        n_shards=n_shards)
     t0 = time.time()
-    _, m = run_grid(grid, fleet, pred_seed=7, params=params,
-                    rl_mode="greedy", n_shards=n_shards)
+    final, m = run_grid(grid, fleet, pred_seed=7, params=params,
+                        rl_mode="greedy", n_shards=n_shards)
     elapsed = time.time() - t0
     m = {k: np.asarray(v) for k, v in m.items()}
 
@@ -107,11 +121,14 @@ def xsim_main(n_seeds: int = 4, include_naive: bool = False,
         by.setdefault(lab["strategy"], []).append(i)
     base = {k: min(float(np.mean(m[k][idx])) for idx in by.values())
             for k in ("twt_s", "makespan_s", "core_hours")}
+    rows = {}
     for strat, idx in sorted(by.items()):
         tw = float(np.mean(m["twt_s"][idx]))
         mk = float(np.mean(m["makespan_s"][idx]))
         ch = float(np.mean(m["core_hours"][idx]))
         oh = float(np.mean(m["oh_hours"][idx]))
+        rows[strat] = {"twt_s": tw, "makespan_s": mk, "core_hours": ch,
+                       "oh_hours": oh, "n": len(idx)}
         print(f"xsim_strategies/{strat},{elapsed * 1e6 / grid.n:.0f},"
               f"twt=+{(tw / max(base['twt_s'], 1e-9) - 1) * 100:.0f}%;"
               f"makespan=+{(mk / base['makespan_s'] - 1) * 100:.0f}%;"
@@ -119,6 +136,34 @@ def xsim_main(n_seeds: int = 4, include_naive: bool = False,
               f"oh_hours={oh:.3f}")
     print(f"xsim_strategies/n,0,scenarios={grid.n};"
           f"scenarios_per_sec={grid.n / elapsed:.0f}")
+
+    trace_sec = None
+    if trace_path is not None:
+        trace_path.parent.mkdir(parents=True, exist_ok=True)
+        trace_sec = obs_export.write_chrome_trace(str(trace_path), final,
+                                                  grid.labels)
+        print(f"xsim_strategies/trace,0,"
+              f"events={trace_sec['events_total']};"
+              f"dropped={trace_sec['events_dropped']};"
+              f"capacity={cfg.trace_capacity};wrote={trace_path}")
+    if json_path is not None:
+        summary = obs_metrics.sweep_summary(final, n_steps=cfg.n_steps)
+        rec = telemetry.record(
+            "xsim_strategies",
+            run={"label": "strategies", "n_shards": n_shards or 1,
+                 "backend": jax.default_backend(),
+                 "n_scenarios": grid.n, "n_steps": cfg.n_steps,
+                 "policies": sorted(by),
+                 "traced": trace_path is not None},
+            profile={"sweep_s": elapsed,
+                     "scenarios_per_sec": grid.n / elapsed,
+                     "us_per_scenario": elapsed * 1e6 / grid.n},
+            metrics={"fleet": obs_metrics.to_host(summary),
+                     "strategies": rows},
+            trace=trace_sec,
+        )
+        json_path.parent.mkdir(parents=True, exist_ok=True)
+        json_path.write_text(json.dumps(rec, indent=2))
 
 
 def main() -> None:
@@ -176,6 +221,16 @@ if __name__ == "__main__":
                     help="xsim only: shard_map the scenario axis over "
                          "the first N devices (default: single-device "
                          "vmap)")
+    ap.add_argument("--trace", type=Path, default=None, metavar="OUT.json",
+                    help="xsim only: record per-scenario event rings "
+                         "during the sweep and export them as a Chrome "
+                         "trace (open in Perfetto)")
+    ap.add_argument("--no-trace", action="store_true",
+                    help="explicitly disable tracing (the default; errors "
+                         "if combined with --trace)")
+    ap.add_argument("--json", type=Path, default=None, metavar="PATH",
+                    help="xsim only: write the xsim_strategies telemetry "
+                         "record as JSON")
     args = ap.parse_args()
     if args.policy is not None and args.policy not in \
             ENGINE_POLICIES[args.engine]:
@@ -196,9 +251,17 @@ if __name__ == "__main__":
         err = shards_arg_error(args.shards)
         if err is not None:
             ap.error(err)
+    # observability flags validate up front too, before any jit work
+    if args.trace is not None and args.no_trace:
+        ap.error("--trace and --no-trace are mutually exclusive")
+    for flag, val in (("--trace", args.trace), ("--json", args.json)):
+        if val is not None and args.engine != "xsim":
+            ap.error(f"{flag} requires --engine xsim (the {args.engine} "
+                     "engine carries no event rings)")
     if args.engine == "xsim":
         xsim_main(include_naive=args.policy == "asa-naive",
                   include_rl=args.policy == "rl",
-                  n_shards=args.shards)
+                  n_shards=args.shards,
+                  trace_path=args.trace, json_path=args.json)
     else:
         main()

@@ -4,12 +4,20 @@ Builds the full scenario grid (centers × scales × workflows × strategies
 × seeds), runs it as ONE jitted ``vmap(lax.scan)`` program, and reports
 scenarios/sec — the number the perf trajectory tracks from this PR on.
 
+The JSON record (``--json``) is a schema-v1 ``repro.obs.telemetry``
+record (kind ``xsim_throughput``): the gated throughput numbers live in
+its ``profile`` section, the fleet counters/histograms
+(``repro.obs.metrics``) in ``metrics``, and — when ``--trace`` is given
+— the ring accounting in ``trace``. Tracing runs as a SECOND timed pass
+(the gated numbers always come from the untraced sweep) and its
+throughput cost is reported as ``profile.trace_overhead_frac``.
+
 CSV rows: ``name,us_per_call,derived`` (benchmarks/run.py convention).
 
   python -m benchmarks.xsim_throughput            # ≥1000 scenarios
   python -m benchmarks.xsim_throughput --smoke    # CI-sized quick pass
   python -m benchmarks.xsim_throughput --shards 8 # device-parallel sweep
-  python -m benchmarks.xsim_throughput --profile  # steps-vs-budget record
+  python -m benchmarks.xsim_throughput --smoke --trace bench/trace.json
 """
 
 from __future__ import annotations
@@ -22,6 +30,9 @@ from pathlib import Path
 import jax
 import numpy as np
 
+from repro.obs import export as obs_export
+from repro.obs import metrics as obs_metrics
+from repro.obs import telemetry
 from repro.xsim import backfill, events, policies
 from repro.xsim.grid import XSimConfig, make_grid, run_grid
 
@@ -58,14 +69,9 @@ def profile_record(final, cfg: XSimConfig, compile_s: float,
     }
 
 
-def bench(n_seeds: int, reps: int, label: str,
-          freed_mode: str = "ref", n_shards: int | None = None,
-          profile: bool = False) -> dict:
-    cfg = XSimConfig(n_warm=16, n_backlog=12, n_arrivals=16, max_stages=9,
-                     t0=3600.0)
-    grid = make_grid(cfg, n_seeds=n_seeds, shrink=1 / 64.0)
-    fleet = policies.init_fleet(int(grid.geo_idx.max()) + 1)
-
+def _timed_sweep(grid, fleet, reps: int, freed_mode: str,
+                 n_shards: int | None):
+    """(final, m, compile_s, steady_s) for one grid configuration."""
     t0 = time.time()
     final, m = run_grid(grid, fleet, freed_mode=freed_mode,
                         n_shards=n_shards)
@@ -77,7 +83,20 @@ def bench(n_seeds: int, reps: int, label: str,
         final, m = run_grid(grid, fleet, pred_seed=r + 2,
                             freed_mode=freed_mode, n_shards=n_shards)
         jax.block_until_ready(final)
-    steady_s = (time.time() - t0) / reps
+    return final, m, compile_s, (time.time() - t0) / reps
+
+
+def bench(n_seeds: int, reps: int, label: str,
+          freed_mode: str = "ref", n_shards: int | None = None,
+          trace_path: Path | None = None,
+          trace_capacity: int | None = None) -> dict:
+    cfg = XSimConfig(n_warm=16, n_backlog=12, n_arrivals=16, max_stages=9,
+                     t0=3600.0)
+    grid = make_grid(cfg, n_seeds=n_seeds, shrink=1 / 64.0)
+    fleet = policies.init_fleet(int(grid.geo_idx.max()) + 1)
+
+    final, m, compile_s, steady_s = _timed_sweep(grid, fleet, reps,
+                                                 freed_mode, n_shards)
 
     done = float(np.mean(np.asarray(m["wf_done"])
                          / np.maximum(np.asarray(m["wf_total"]), 1)))
@@ -89,32 +108,65 @@ def bench(n_seeds: int, reps: int, label: str,
           f"n_steps={cfg.n_steps};max_jobs={cfg.max_jobs};"
           f"compile_s={compile_s:.1f};wf_done_frac={done:.3f};"
           f"backend={jax.default_backend()};freed_mode={freed_mode}")
-    rec = {
-        "label": label,
-        "scenarios_per_sec": sps,
-        "per_device_scenarios_per_sec": sps / shards,
-        "us_per_scenario": steady_s * 1e6 / grid.n,
-        "n_scenarios": grid.n,
-        "n_shards": shards,
-        "n_devices": len(jax.devices()),
-        "n_steps": cfg.n_steps,
-        "max_jobs": cfg.max_jobs,
-        "reps": reps,
-        "compile_s": compile_s,
-        "wf_done_frac": done,
-        "backend": jax.default_backend(),
-        "freed_mode": freed_mode,
-        "in_scan_learning": True,   # within-run ASA learning is always on
-    }
-    if profile:
-        rec["profile"] = p = profile_record(final, cfg, compile_s, steady_s)
-        print(f"xsim_throughput/{label}/profile: "
-              f"steps={p['steps_executed_max']}max/"
-              f"{p['steps_executed_mean']:.1f}mean of "
-              f"{p['steps_budget']} budget; "
-              f"chunks={p['chunks_run']}x{p['chunk_steps']}; "
-              f"drained={p['drained_frac']:.3f}; "
-              f"compile={p['compile_s']:.1f}s steady={p['steady_s']:.2f}s")
+
+    profile = profile_record(final, cfg, compile_s, steady_s)
+    profile.update(
+        scenarios_per_sec=sps,
+        per_device_scenarios_per_sec=sps / shards,
+        us_per_scenario=steady_s * 1e6 / grid.n,
+    )
+    print(f"xsim_throughput/{label}/profile: "
+          f"steps={profile['steps_executed_max']}max/"
+          f"{profile['steps_executed_mean']:.1f}mean of "
+          f"{profile['steps_budget']} budget; "
+          f"chunks={profile['chunks_run']}x{profile['chunk_steps']}; "
+          f"drained={profile['drained_frac']:.3f}; "
+          f"compile={profile['compile_s']:.1f}s "
+          f"steady={profile['steady_s']:.2f}s")
+
+    metrics_final = final
+    trace_sec = None
+    if trace_path is not None:
+        # tracing costs a second timed pass: the gated numbers above stay
+        # untraced, and the traced pass prices its own overhead
+        tcfg = cfg.with_trace(trace_capacity)
+        tgrid = make_grid(tcfg, n_seeds=n_seeds, shrink=1 / 64.0)
+        tfinal, _tm, tcompile_s, tsteady_s = _timed_sweep(
+            tgrid, fleet, reps, freed_mode, n_shards)
+        overhead = tsteady_s / steady_s - 1.0
+        profile.update(trace_overhead_frac=overhead,
+                       traced_steady_s=tsteady_s,
+                       traced_compile_s=tcompile_s)
+        trace_path.parent.mkdir(parents=True, exist_ok=True)
+        trace_sec = obs_export.write_chrome_trace(str(trace_path), tfinal,
+                                                  tgrid.labels)
+        metrics_final = tfinal  # summary gains the ev_* event counters
+        print(f"xsim_throughput/{label}/trace: "
+              f"capacity={tcfg.trace_capacity}/scenario; "
+              f"events={trace_sec['events_total']} "
+              f"(dropped={trace_sec['events_dropped']}); "
+              f"overhead={overhead:+.1%}; wrote {trace_path}")
+
+    summary = obs_metrics.sweep_summary(metrics_final, n_steps=cfg.n_steps)
+    rec = telemetry.record(
+        "xsim_throughput",
+        run={
+            "label": label,
+            "freed_mode": freed_mode,
+            "n_shards": shards,
+            "n_devices": len(jax.devices()),
+            "backend": jax.default_backend(),
+            "n_scenarios": grid.n,
+            "n_steps": cfg.n_steps,
+            "max_jobs": cfg.max_jobs,
+            "reps": reps,
+            "traced": trace_path is not None,
+            "in_scan_learning": True,  # within-run ASA learning always on
+        },
+        profile=profile,
+        metrics=obs_metrics.to_host(summary),
+        trace=trace_sec,
+    )
     return rec
 
 
@@ -130,18 +182,38 @@ def main() -> None:
                          "kernel on TPU, sorted jnp elsewhere; ref_n2 = "
                          "the O(n²) differential reference")
     ap.add_argument("--profile", action="store_true",
-                    help="add a per-phase breakdown (steps executed vs "
-                         "budget, chunks run, compile/steady split) to "
-                         "the JSON record")
+                    help="deprecated no-op: the per-phase breakdown is "
+                         "always part of the telemetry record now")
+    ap.add_argument("--trace", type=Path, default=None, metavar="OUT.json",
+                    help="run a second, traced pass and export its event "
+                         "rings as a Chrome trace (open in Perfetto); "
+                         "overhead vs the untraced pass lands in "
+                         "profile.trace_overhead_frac")
+    ap.add_argument("--no-trace", action="store_true",
+                    help="explicitly disable tracing (the default; "
+                         "errors if combined with --trace)")
+    ap.add_argument("--trace-capacity", type=int, default=None, metavar="C",
+                    help="event-ring slots per scenario (default "
+                         "4*max_jobs; requires --trace)")
     ap.add_argument("--shards", type=int, default=None, metavar="N",
                     help="shard_map the scenario axis over the first N "
                          "devices (default: single-device vmap); fake N "
                          "CPU devices with XLA_FLAGS="
                          "--xla_force_host_platform_device_count=N")
     ap.add_argument("--json", type=Path, default=None, metavar="PATH",
-                    help="also write the result record as JSON (the CI "
+                    help="also write the telemetry record as JSON (the CI "
                          "bench-trajectory artifact)")
     args = ap.parse_args()
+    # upfront flag validation (same contract as the --shards check: fail
+    # before any compilation happens, not after the untraced pass)
+    if args.trace is not None and args.no_trace:
+        ap.error("--trace and --no-trace are mutually exclusive")
+    if args.trace_capacity is not None:
+        if args.trace is None:
+            ap.error("--trace-capacity requires --trace OUT.json")
+        if args.trace_capacity < 1:
+            ap.error(f"--trace-capacity must be >= 1, "
+                     f"got {args.trace_capacity}")
     if args.shards is not None:
         from repro.launch.mesh import shards_arg_error
         err = shards_arg_error(args.shards)
@@ -154,12 +226,14 @@ def main() -> None:
         # 54 cells × 2 seeds = 108 scenarios
         rec = bench(n_seeds=2, reps=args.reps or 1, label="smoke",
                     freed_mode=mode, n_shards=args.shards,
-                    profile=args.profile)
+                    trace_path=args.trace,
+                    trace_capacity=args.trace_capacity)
     else:
         # 54 cells × 19 seeds = 1026 scenarios in one batched program
         rec = bench(n_seeds=19, reps=args.reps or 2, label="sweep1k",
                     freed_mode=mode, n_shards=args.shards,
-                    profile=args.profile)
+                    trace_path=args.trace,
+                    trace_capacity=args.trace_capacity)
     if args.json is not None:
         args.json.parent.mkdir(parents=True, exist_ok=True)
         args.json.write_text(json.dumps(rec, indent=2))

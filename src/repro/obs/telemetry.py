@@ -1,0 +1,115 @@
+"""The unified telemetry schema every bench/train runner emits.
+
+One JSON object per run leg, written by ``benchmarks/xsim_throughput.py``,
+``benchmarks/run.py`` and ``benchmarks/rl_train.py``, and consumed by
+``benchmarks/bench_gate.py`` — which runs from a bare checkout *without
+jax*, so this module is **stdlib-only** (importing it must never pull
+``repro.obs.trace``/``metrics``/``export`` or anything that imports jax).
+
+Schema v1 (a "record"):
+
+    {
+      "telemetry_version": 1,
+      "kind": "xsim_throughput" | "xsim_strategies" | "rl_train",
+      "run": {...},        # runner identity: label/config/flags
+      "profile": {...},    # timing: compile_s, steady_s, scenarios_per_sec,
+                           #         us_per_scenario, (trace_overhead_frac)
+      "metrics": {...},    # obs.metrics fleet summary (counters/histograms)
+      "trace": {...}|null, # trace meta: capacity/events/dropped/path
+    }
+
+``kind`` determines which sections are required (REQUIRED_SECTIONS).
+Unknown extra keys are allowed — the version only bumps when an existing
+field changes meaning or a required one disappears.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+TELEMETRY_VERSION = 1
+
+KINDS = ("xsim_throughput", "xsim_strategies", "rl_train")
+
+# sections a record of each kind must carry ("trace" may be None but the
+# key itself must exist — it says "tracing was off", not "schema unknown")
+REQUIRED_SECTIONS: dict[str, tuple[str, ...]] = {
+    "xsim_throughput": ("run", "profile", "metrics", "trace"),
+    "xsim_strategies": ("run", "profile", "metrics", "trace"),
+    "rl_train": ("run", "profile", "metrics", "trace"),
+}
+
+# profile keys bench_gate gates on for throughput legs
+PROFILE_REQUIRED = ("scenarios_per_sec", "us_per_scenario")
+
+
+def record(kind: str, *, run: dict[str, Any], profile: dict[str, Any],
+           metrics: dict[str, Any], trace: dict[str, Any] | None = None,
+           ) -> dict[str, Any]:
+    """Assemble a schema-v1 telemetry record (validates on the way out)."""
+    rec = {"telemetry_version": TELEMETRY_VERSION, "kind": kind,
+           "run": run, "profile": profile, "metrics": metrics,
+           "trace": trace}
+    errs = validate(rec)
+    if errs:
+        raise ValueError("invalid telemetry record: " + "; ".join(errs))
+    return rec
+
+
+def is_telemetry(obj: Any) -> bool:
+    """Loose sniff: does this JSON object claim to be a telemetry record?"""
+    return isinstance(obj, dict) and "telemetry_version" in obj
+
+
+def validate(rec: Any) -> list[str]:
+    """Return a list of schema violations (empty ⇒ valid).
+
+    Collects every problem instead of raising on the first so CI's
+    trace-smoke leg can print them all at once.
+    """
+    errs: list[str] = []
+    if not isinstance(rec, dict):
+        return [f"record is {type(rec).__name__}, expected object"]
+    ver = rec.get("telemetry_version")
+    if ver != TELEMETRY_VERSION:
+        errs.append(f"telemetry_version is {ver!r}, "
+                    f"expected {TELEMETRY_VERSION}")
+    kind = rec.get("kind")
+    if kind not in KINDS:
+        errs.append(f"kind is {kind!r}, expected one of {KINDS}")
+        return errs
+    for sec in REQUIRED_SECTIONS[kind]:
+        if sec not in rec:
+            errs.append(f"missing section {sec!r}")
+        elif sec != "trace" and not isinstance(rec[sec], dict):
+            errs.append(f"section {sec!r} is "
+                        f"{type(rec[sec]).__name__}, expected object")
+    tr = rec.get("trace")
+    if tr is not None and not isinstance(tr, dict):
+        errs.append(f"section 'trace' is {type(tr).__name__}, "
+                    "expected object or null")
+    prof = rec.get("profile")
+    if kind in ("xsim_throughput",) and isinstance(prof, dict):
+        for k in PROFILE_REQUIRED:
+            if k not in prof:
+                errs.append(f"profile missing {k!r}")
+    return errs
+
+
+def throughput_leg(rec: dict[str, Any]) -> dict[str, Any]:
+    """Flatten a throughput record into bench_gate's leg view.
+
+    Returns ``{"freed_mode", "n_shards", "traced", "scenarios_per_sec",
+    "us_per_scenario", ...profile}`` — raises KeyError-free ValueError
+    naming what is missing (bench_gate surfaces it per leg).
+    """
+    errs = validate(rec)
+    if errs:
+        raise ValueError("; ".join(errs))
+    run, prof = rec["run"], rec["profile"]
+    leg = dict(prof)
+    leg["freed_mode"] = run.get("freed_mode", "ref")
+    leg["n_shards"] = run.get("n_shards")
+    leg["traced"] = bool(run.get("traced", False))
+    leg["label"] = run.get("label", "")
+    return leg

@@ -1,0 +1,232 @@
+"""Device-resident, fixed-capacity per-scenario event ring buffer.
+
+A ``TraceBuffer`` records scheduling events (admissions, starts,
+completions, naive cancels/resubmits) *inside* the jitted event scan:
+the whole buffer is one fixed ``(capacity, NF)`` f32 matrix plus one
+monotone ``head`` counter, so it rides ``ScenarioState`` through
+``lax.scan`` / ``vmap`` / ``shard_map`` like any other job-table
+column. ``trace=None`` on the state statically elides every append —
+the disabled path is the pre-observability program, bit for bit
+(pinned by tests/test_obs.py).
+
+Ring semantics — a *sliding window*, not a modulo ring: the buffer
+always holds the newest ``min(head, capacity)`` events, oldest first,
+right-aligned (rows ``[capacity - kept, capacity)``); rows in front of
+that are still the zeros ``init`` wrote (kind 0 = empty). An append
+compacts its masked lanes to a dense, lane-ordered prefix (cumsum +
+``searchsorted`` + gather — deliberately NO scatter, which is what
+makes tracing affordable inside the event scan: XLA lowers a masked
+scatter to a serialized per-lane write on CPU, ~35% sweep overhead
+*per scattered array*, while compact-gather + ``concatenate`` +
+``dynamic_slice`` are contiguous vectorized ops) and slides the window
+left by the event count, so once ``head > capacity`` the OLDEST events
+fall off the front deterministically. ``overflowed`` is derived, not
+stored: ``head > capacity``. Decoding (host-side, see ``decode``) is a
+plain tail slice — the window is already chronological.
+
+All seven event fields live as f32 columns of the matrix; the integer
+fields (kind, job, stage, policy, step) are exact in f32 because their
+values stay far below 2**24. Column order is ``FIELDS``:
+
+  kind   f32 col 0  event kind (EV_*; 0 = empty slot)
+  t      f32 col 1  simulation time of the event
+  job    f32 col 2  job-table row
+  stage  f32 col 3  workflow stage index, -1 for background jobs
+  cores  f32 col 4  the job's core width
+  policy f32 col 5  scenario policy id (BIGJOB..RL)
+  step   f32 col 6  ``ScenarioState.steps`` value when appended (1-based)
+  head   i32 ()     total events ever appended (window slide + overflow)
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# --- event kinds (0 is reserved for "empty slot") ---------------------------
+EV_SUBMIT = 1     # job admitted into the FCFS queue (incl. resubmissions)
+EV_START = 2      # job started running (scheduling pass)
+EV_FINISH = 3     # running job completed
+EV_CANCEL = 4     # naive/RL early allocation cancelled at its start instant
+EV_RESUBMIT = 5   # cancelled successor released by predecessor completion
+
+EVENT_NAMES = {
+    EV_SUBMIT: "submit",
+    EV_START: "start",
+    EV_FINISH: "finish",
+    EV_CANCEL: "cancel",
+    EV_RESUBMIT: "resubmit",
+}
+
+FIELDS = ("kind", "t", "job", "stage", "cores", "policy", "step")
+NF = len(FIELDS)
+_COL = {f: i for i, f in enumerate(FIELDS)}
+_INT_FIELDS = ("kind", "job", "stage", "policy", "step")
+
+
+class TraceBuffer(NamedTuple):
+    """One scenario's event window (a pytree; vmap the leading axis)."""
+
+    data: jax.Array     # f32 (C, NF) newest events right-aligned
+    head: jax.Array     # i32 () events ever appended
+
+
+def init(capacity: int) -> TraceBuffer:
+    """An empty ring of ``capacity`` event slots."""
+    if capacity < 1:
+        raise ValueError(f"trace capacity must be >= 1, got {capacity}")
+    return TraceBuffer(data=jnp.zeros((capacity, NF), jnp.float32),
+                       head=jnp.int32(0))
+
+
+def capacity(tr: TraceBuffer) -> int:
+    return int(tr.data.shape[-2])
+
+
+def overflowed(tr: TraceBuffer) -> jax.Array:
+    """True once at least one event has been dropped (window slid past)."""
+    return tr.head > tr.data.shape[-2]
+
+
+def column(tr: TraceBuffer, field: str) -> jax.Array:
+    """One field's (C,) column (f32 — cast on the host if needed)."""
+    return tr.data[..., _COL[field]]
+
+
+def _rows(mask: jax.Array, kind: jax.Array, job: jax.Array,
+          stage: jax.Array, cores: jax.Array, t: jax.Array,
+          policy: jax.Array, step: jax.Array) -> jax.Array:
+    """(L, NF) f32 event rows in FIELDS column order (lane-aligned)."""
+    L = mask.shape[0]
+
+    def b(v):
+        return jnp.broadcast_to(jnp.asarray(v, jnp.float32), (L,))
+
+    return jnp.stack([b(kind), b(t), b(job), b(stage), b(cores),
+                      b(policy), b(step)], axis=1)
+
+
+def _slide(data: jax.Array, dense: jax.Array,
+           cnt: jax.Array) -> jax.Array:
+    """Append ``dense[:cnt]`` rows, dropping the oldest ``cnt`` rows.
+
+    ``dense`` rows at index >= cnt are garbage and provably never enter
+    the window: with ``ext = concat(data, dense)`` the slice
+    ``ext[cnt : cnt + C]`` covers ``data[cnt:]`` plus ``dense[:cnt]``.
+    """
+    C = data.shape[0]
+    ext = jnp.concatenate([data, dense], axis=0)
+    return jax.lax.dynamic_slice(ext, (cnt, jnp.int32(0)), (C, NF))
+
+
+def _append(tr: TraceBuffer, mask: jax.Array, kind: jax.Array,
+            job: jax.Array, stage: jax.Array, cores: jax.Array,
+            t: jax.Array, policy: jax.Array,
+            step: jax.Array) -> TraceBuffer:
+    """Masked multi-event window write (kind is per-lane here)."""
+    L = mask.shape[0]
+    m32 = mask.astype(jnp.int32)
+    cnt = jnp.sum(m32)
+    # dense lane-ordered prefix: row k = the (k+1)-th True lane. cumsum
+    # is strictly increasing on True lanes, so searchsorted(cs, k+1)
+    # finds exactly that lane; ranks past cnt clamp to a garbage row
+    # that _slide never exposes.
+    cs = jnp.cumsum(m32)
+    src = jnp.searchsorted(cs, jnp.arange(1, L + 1, dtype=cs.dtype),
+                           side="left")
+    src = jnp.minimum(src, L - 1)
+    rows = _rows(mask, kind, job, stage, cores, t, policy, step)
+    dense = jnp.take(rows, src, axis=0)
+    return TraceBuffer(data=_slide(tr.data, dense, cnt),
+                       head=tr.head + cnt)
+
+
+def append_masked(tr: TraceBuffer, mask: jax.Array, *, kind: int,
+                  t: jax.Array, job: jax.Array, stage: jax.Array,
+                  cores: jax.Array, policy: jax.Array,
+                  step: jax.Array) -> TraceBuffer:
+    """Append one event per True lane of ``mask`` (lane order).
+
+    ``job``/``stage``/``cores`` are per-lane arrays, ``t``/``policy``/
+    ``step`` scalars. ``head`` advances by the full masked count even
+    when it exceeds the capacity; in that (pathological: more events in
+    ONE append than the whole ring holds) case the window lands
+    entirely inside the new batch and only its newest ``capacity``
+    lanes survive — the drop order stays deterministic.
+    """
+    return _append(tr, mask, jnp.int32(kind), job, stage, cores,
+                   t, policy, step)
+
+
+def append_segments(tr: TraceBuffer,
+                    segments, *, t: jax.Array, policy: jax.Array,
+                    step: jax.Array) -> TraceBuffer:
+    """Fuse several same-instant masked appends into ONE window write.
+
+    ``segments`` is a sequence of ``(mask, kind, job, stage, cores)``
+    tuples; events land in segment order (then lane order within a
+    segment) — exactly the order the equivalent ``append_masked`` chain
+    would produce, for one cumsum/searchsorted/slide instead of one per
+    segment.
+    """
+    masks, kinds, jobs, stages, widths = [], [], [], [], []
+    for mask, kind, job, stage, cores in segments:
+        masks.append(mask)
+        kinds.append(jnp.full(mask.shape, kind, jnp.int32))
+        jobs.append(job)
+        stages.append(stage)
+        widths.append(cores)
+    return _append(tr, jnp.concatenate(masks), jnp.concatenate(kinds),
+                   jnp.concatenate(jobs), jnp.concatenate(stages),
+                   jnp.concatenate(widths), t, policy, step)
+
+
+def append_if(tr: TraceBuffer, flag: jax.Array, *, kind: int, t: jax.Array,
+              job: jax.Array, stage: jax.Array, cores: jax.Array,
+              policy: jax.Array, step: jax.Array) -> TraceBuffer:
+    """Append a single event when the scalar ``flag`` is True."""
+    row = _rows(jnp.ones((1,), bool), kind, job, stage, cores, t,
+                policy, step)
+    return TraceBuffer(
+        data=_slide(tr.data, row, flag.astype(jnp.int32)),
+        head=tr.head + flag.astype(jnp.int32),
+    )
+
+
+# ------------------------------------------------------- host-side decoding
+
+
+def decode(tr: TraceBuffer) -> tuple[dict[str, np.ndarray], dict]:
+    """Decode ONE scenario's ring into chronological order (host side).
+
+    Returns ``(events, meta)``: ``events`` maps each field name to an
+    oldest-first array of the surviving events; ``meta`` records
+    ``capacity``, ``total`` (events ever appended), ``kept``,
+    ``dropped`` and the ``overflowed`` flag.
+    """
+    data = np.asarray(tr.data)
+    if data.ndim != 2:
+        raise ValueError("decode takes a single scenario's TraceBuffer; "
+                         "use decode_batch for a batched one")
+    C = data.shape[0]
+    total = int(np.asarray(tr.head))
+    kept = min(total, C)
+    window = data[C - kept:]  # already chronological (window invariant)
+    events = {}
+    for f, col in _COL.items():
+        v = window[:, col]
+        events[f] = (v.astype(np.int32) if f in _INT_FIELDS
+                     else v.astype(np.float32))
+    meta = {"capacity": C, "total": total, "kept": kept,
+            "dropped": total - kept, "overflowed": total > C}
+    return events, meta
+
+
+def decode_batch(tr: TraceBuffer) -> list[tuple[dict[str, np.ndarray], dict]]:
+    """``decode`` every scenario of a batched (B, C, NF) TraceBuffer."""
+    host = TraceBuffer(*[np.asarray(x) for x in tr])
+    B = host.head.shape[0]
+    return [decode(TraceBuffer(*[x[i] for x in host])) for i in range(B)]

@@ -28,6 +28,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import metrics as obs_metrics
 from repro.rl import policy as P
 from repro.rl import rollout
 from repro.xsim.grid import XSimConfig, make_grid, warm_fleet
@@ -61,6 +62,10 @@ class TrainResult:
     init_params: P.PolicyParams
     rewards: list[float]        # batch-mean reward per iteration
     entropies: list[float]      # mean action entropy per iteration (nats)
+    # per-iteration fleet observability summaries (repro.obs.metrics
+    # counters over each rollout's final states, JSON-safe dicts) — the
+    # rl_train telemetry record ships these as metrics.iterations
+    telemetry: list[dict] = field(default_factory=list)
 
 
 def _surrogate(params: P.PolicyParams, obs, act, adv) -> jax.Array:
@@ -112,20 +117,26 @@ def train(cfg: TrainConfig = TrainConfig()) -> TrainResult:
 
     rewards: list[float] = []
     entropies: list[float] = []
+    telemetry: list[dict] = []
     for i in range(cfg.iters):
         grid = make_grid(cfg.sim, cfg.center_names, cfg.workflows,
                          policy_ids=(RL,), n_seeds=cfg.n_seeds,
                          shrink=cfg.shrink, seed=cfg.seed * 10_000 + i + 1)
-        _, _, traj = rollout.collect(grid, params, fleet,
-                                     pred_seed=i + 1, rl_mode="sample",
-                                     oh_weight=cfg.oh_weight,
-                                     n_shards=cfg.n_shards)
+        final, _, traj = rollout.collect(grid, params, fleet,
+                                         pred_seed=i + 1, rl_mode="sample",
+                                         oh_weight=cfg.oh_weight,
+                                         n_shards=cfg.n_shards)
         rewards.append(float(jnp.mean(traj.reward)))
+        # fleet observability counters for this iteration's rollouts
+        # (same jitted reduction every iteration — no recompiles)
+        telemetry.append(obs_metrics.to_host(obs_metrics.sweep_summary(
+            final, n_steps=cfg.sim.n_steps)))
         params, ent = reinforce_step(params, traj.obs, traj.act,
                                      traj.reward, cfg.lr)
         entropies.append(float(ent))
     return TrainResult(params=params, init_params=init_params,
-                       rewards=rewards, entropies=entropies)
+                       rewards=rewards, entropies=entropies,
+                       telemetry=telemetry)
 
 
 def evaluate(params: P.PolicyParams, cfg: TrainConfig = TrainConfig(), *,

@@ -74,6 +74,7 @@ from jax.experimental.shard_map import shard_map
 
 from repro.core import asa
 from repro.core.bins import make_bins
+from repro.obs import trace as obs_trace
 from repro.sched.strategies import (NAIVE_CANCEL_LATENCY_S,
                                     NAIVE_IDLE_THRESHOLD_S)
 from repro.xsim import backfill
@@ -92,6 +93,14 @@ def _naive_like(s: ScenarioState) -> jax.Array:
     this world — the over-allocation OH is what makes its
     submit-lead-time problem non-degenerate."""
     return (s.policy == ASA_NAIVE) | (s.policy == RL)
+
+
+def _job_stage(s: ScenarioState) -> jax.Array:
+    """i32 (max_jobs,) workflow stage index per row; -1 for background."""
+    n = s.status.shape[0]
+    y = jnp.arange(s.wf_rows.shape[0], dtype=jnp.int32)
+    tgt = jnp.where(s.wf_rows >= 0, s.wf_rows, n)   # n = drop
+    return jnp.full(n, -1, jnp.int32).at[tgt].set(y, mode="drop")
 
 
 def next_event_time(s: ScenarioState, naive: bool = True) -> jax.Array:
@@ -136,15 +145,19 @@ def _release_per_stage(s: ScenarioState, newly_done, now) -> ScenarioState:
 
 
 def _release_naive_resubmit(s: ScenarioState, newly_done, now
-                            ) -> ScenarioState:
-    """Stage y DONE ⇒ a CANCELLED successor is resubmitted now (§4.5)."""
+                            ) -> tuple[ScenarioState, jax.Array, jax.Array]:
+    """Stage y DONE ⇒ a CANCELLED successor is resubmitted now (§4.5).
+
+    Also returns ``(fire, succ_c)`` — the firing predecessor lanes and
+    their (clipped) successor rows — so ``sim_step`` can fold the
+    RESUBMIT events into its fused trace append."""
     n = s.status.shape[0]
     succ_c = jnp.clip(s.wf_next, 0, n - 1)
     fire = (newly_done & s.is_wf & _naive_like(s)
             & (s.wf_next >= 0) & (s.status[succ_c] == CANCELLED))
     succ = jnp.where(fire, s.wf_next, n)
     submit = s.submit.at[succ].set(now, mode="drop")
-    return s._replace(submit=submit)
+    return s._replace(submit=submit), fire, succ_c
 
 
 def _start_hook(s: ScenarioState, now, bins, naive: bool) -> ScenarioState:
@@ -196,7 +209,14 @@ def _start_hook(s: ScenarioState, now, bins, naive: bool) -> ScenarioState:
 
     prev_done = (prev_row >= 0) & (s.status[pc] == DONE)
     resub_t = jnp.where(prev_done, now, jnp.inf)
+    tr = s.trace
+    if tr is not None:
+        tr = obs_trace.append_if(
+            tr, do_cancel, kind=obs_trace.EV_CANCEL, t=now, job=row,
+            stage=y.astype(jnp.int32), cores=s.cores[row],
+            policy=s.policy, step=s.steps)
     return s._replace(
+        trace=tr,
         est=est,
         start_pending=pending.at[y].set(False),
         hold=s.hold.at[y].set(jnp.where(do_hold, early, s.hold[y])),
@@ -391,8 +411,10 @@ def sim_step(s: ScenarioState, bins, *, bf_passes: int = backfill.BF_PASSES,
                    steps=s.steps + jnp.isfinite(nxt).astype(jnp.int32))
     s, newly_done = complete_jobs(s, now)
     s = _release_per_stage(s, newly_done, now)
+    resub_fire = resub_succ = None
     if naive:
-        s = _release_naive_resubmit(s, newly_done, now)
+        s, resub_fire, resub_succ = _release_naive_resubmit(
+            s, newly_done, now)
     s, newly_admitted = admit_jobs(s, now, naive)
     # first admissions of ASA/naive stages queue a chain-hook event
     # (the -inf expected_end sentinel keeps resubmissions from re-firing)
@@ -403,6 +425,22 @@ def sim_step(s: ScenarioState, bins, *, bf_passes: int = backfill.BF_PASSES,
     pre_start = s.start
     s = backfill.schedule_pass(s, bf_passes=bf_passes, freed_mode=freed_mode)
     started = (s.status == RUNNING) & jnp.isinf(pre_start)
+    if s.trace is not None:
+        # one fused ring write per step, in event order: finishes,
+        # naive resubmissions, admissions, starts (cancels are appended
+        # from the start hook itself, inside the drain)
+        n = s.status.shape[0]
+        row_i = jnp.arange(n, dtype=jnp.int32)
+        stg = _job_stage(s)
+        segs = [(newly_done, obs_trace.EV_FINISH, row_i, stg, s.cores)]
+        if naive:
+            segs.append((resub_fire, obs_trace.EV_RESUBMIT, resub_succ,
+                         stg[resub_succ], s.cores[resub_succ]))
+        segs.append((newly_admitted, obs_trace.EV_SUBMIT, row_i, stg,
+                     s.cores))
+        segs.append((started, obs_trace.EV_START, row_i, stg, s.cores))
+        s = s._replace(trace=obs_trace.append_segments(
+            s.trace, segs, t=now, policy=s.policy, step=s.steps))
     s = s._replace(start_pending=s.start_pending | (
         stage_ok & started[rows]))
     return _drain_hooks(s, now, bins, greedy, naive, params, rl_mode)

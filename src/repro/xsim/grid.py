@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import trace as obs_trace
 from repro.sched.centers import CENTERS, CenterProfile
 from repro.sched.workflows import WORKFLOWS, Workflow
 from repro.xsim import backfill, events, policies
@@ -81,6 +82,9 @@ class XSimConfig:
     #   (events.simulate): smaller = finer early exit, larger = fewer
     #   while_loop round-trips; 0 disables chunking (one static scan).
     #   Bit-identical results for every value — drained steps are no-ops.
+    trace_capacity: int = 0  # event-ring slots per scenario
+    #   (repro.obs.trace); 0 = untraced, statically — no trace ops are
+    #   ever staged and the sweep is the pre-observability program.
 
     def __post_init__(self) -> None:
         if self.pred_mode not in ("greedy", "sample"):
@@ -88,10 +92,29 @@ class XSimConfig:
         if self.chunk_steps < 0:
             raise ValueError(f"chunk_steps must be >= 0, got "
                              f"{self.chunk_steps}")
+        if self.trace_capacity < 0:
+            raise ValueError(f"trace_capacity must be >= 0, got "
+                             f"{self.trace_capacity}")
 
     @property
     def max_jobs(self) -> int:
         return self.n_warm + self.n_backlog + self.n_arrivals + self.max_stages
+
+    def with_trace(self, capacity: int | None = None) -> "XSimConfig":
+        """This config with event tracing on. The default capacity —
+        4·max_jobs — covers the worst event sequence a scenario can emit
+        (submit + start + finish per job, plus the naive cancel/resubmit
+        detours) with slack, so rings normally never overflow."""
+        import dataclasses
+
+        if capacity is None:
+            capacity = 4 * self.max_jobs
+        elif capacity < 1:
+            # an explicit "trace with no room" is a contradiction, not a
+            # request to disable tracing (that is the default config)
+            raise ValueError(f"with_trace needs trace_capacity >= 1, "
+                             f"got {capacity}")
+        return dataclasses.replace(self, trace_capacity=capacity)
 
     @property
     def n_steps(self) -> int:
@@ -230,6 +253,8 @@ def build_scenario(key: jax.Array, center: XCenter, wf_cores: jax.Array,
         repass=jnp.asarray(False),
         pred_greedy=jnp.asarray(cfg.pred_mode == "greedy"),
         steps=jnp.int32(0),
+        trace=(obs_trace.init(cfg.trace_capacity)
+               if cfg.trace_capacity else None),
     )
 
 

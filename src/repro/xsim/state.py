@@ -34,6 +34,7 @@ import numpy as np
 
 from repro.core import asa
 from repro.core.bins import M_DEFAULT
+from repro.obs import trace as obs_trace
 
 # --- job status ladder -----------------------------------------------------
 INVALID = 0   # empty slot (padding)
@@ -108,6 +109,10 @@ class ScenarioState(NamedTuple):
     pred_greedy: jax.Array  # bool () MAP (consistent) vs line-4 sampled a_y
     steps: jax.Array        # i32 () event steps executed (drained no-ops
     #   don't count) — the budget-vs-event profile signal
+    # observability ---------------------------------------------------------
+    trace: "obs_trace.TraceBuffer | None" = None  # event ring buffer
+    #   (repro.obs.trace); None statically elides every trace append —
+    #   the untraced program, bit for bit (pinned by tests/test_obs.py)
 
 
 def empty_table(max_jobs: int) -> dict[str, np.ndarray]:
@@ -131,7 +136,8 @@ def freeze(table: dict[str, np.ndarray], *, total_cores: float,
            free_cores: float, now: float = 0.0, policy: int = BIGJOB,
            t0: float = 0.0, max_stages: int = 9,
            est: asa.ASAState | None = None,
-           est_seed: int = 0, pred_mode: str = "sample") -> ScenarioState:
+           est_seed: int = 0, pred_mode: str = "sample",
+           trace_capacity: int = 0) -> ScenarioState:
     """Build a device ScenarioState from a host-side table + scalars.
 
     ``wf_rows`` (the stage chain) is derived from ``is_wf`` row order.
@@ -142,9 +148,15 @@ def freeze(table: dict[str, np.ndarray], *, total_cores: float,
     Algorithm-1 line-4 rule, matching the event-driven tuned runner
     call-for-call (the cross-validation setting); ``"greedy"`` uses the
     live MAP, the fleet-sweep default (see grid.XSimConfig).
+    ``trace_capacity > 0`` attaches a ``repro.obs.trace`` event ring of
+    that many slots; 0 (default) leaves ``trace=None`` — the untraced
+    program, statically.
     """
     if pred_mode not in ("sample", "greedy"):
         raise ValueError(f"unknown pred_mode {pred_mode!r}")
+    if trace_capacity < 0:
+        raise ValueError(
+            f"trace_capacity must be >= 0, got {trace_capacity}")
     max_jobs = table["status"].shape[0]
     wf_idx = np.nonzero(table["is_wf"])[0]
     if len(wf_idx) > max_stages:
@@ -175,6 +187,7 @@ def freeze(table: dict[str, np.ndarray], *, total_cores: float,
         repass=jnp.asarray(False),
         pred_greedy=jnp.asarray(pred_mode == "greedy"),
         steps=jnp.int32(0),
+        trace=obs_trace.init(trace_capacity) if trace_capacity else None,
     )
 
 

@@ -1,0 +1,456 @@
+"""Observability layer (repro.obs): ring buffer, metrics, export, schema.
+
+Pins the load-bearing contracts of the tracing subsystem:
+
+- ``trace=None`` statically elides every append — the disabled path is
+  the pre-observability program, bit for bit (the shard_map variants of
+  this live in tests/test_xsim_sharded.py);
+- the ring overflows by dropping the OLDEST events deterministically,
+  flags it, and never corrupts surviving events;
+- the Chrome trace export round-trips the ring accounting and the
+  per-scenario ``steps`` counters;
+- the differential replay: per-stage perceived waits reconstructed from
+  the trace alone match ``compare.metrics``'s ``twt_s`` exactly (f32
+  equality) on the 12 mirrored QueueSim scenarios;
+- the telemetry schema rejects malformed records by NAME, and
+  bench_gate turns them into named failures, not KeyErrors.
+"""
+
+from __future__ import annotations
+
+import json
+from types import SimpleNamespace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.obs import export as obs_export
+from repro.obs import metrics as obs_metrics
+from repro.obs import telemetry
+from repro.obs import trace as T
+from repro.xsim import policies
+from repro.xsim.grid import XSimConfig, make_grid, run_grid
+from repro.xsim.state import ASA, ASA_NAIVE, BIGJOB, PER_STAGE, QUEUED, RUNNING
+
+
+def tiny_cfg(**kw) -> XSimConfig:
+    return XSimConfig(n_warm=8, n_backlog=6, n_arrivals=8, max_stages=9,
+                      t0=1800.0, **kw)
+
+
+def tiny_grid(cfg, policy_ids=(BIGJOB, PER_STAGE, ASA, ASA_NAIVE),
+              n_seeds=1):
+    # hpc2n has 3 paper scales → B = 3 · |policies| · n_seeds = 12: the
+    # mirrored QueueSim comparison set
+    return make_grid(cfg, center_names=("hpc2n",), workflows=("blast",),
+                     policy_ids=policy_ids, n_seeds=n_seeds,
+                     shrink=1 / 64.0)
+
+
+@pytest.fixture(scope="module")
+def runs():
+    """One untraced + one traced sweep over the same 12-scenario grid."""
+    cfg = tiny_cfg()
+    tcfg = cfg.with_trace()                    # default 4·max_jobs slots
+    fleet = policies.init_fleet(
+        int(tiny_grid(cfg).geo_idx.max()) + 1)
+    fu, mu = run_grid(tiny_grid(cfg), fleet, pred_seed=3)
+    ft, mt = run_grid(tiny_grid(tcfg), fleet, pred_seed=3)
+    return SimpleNamespace(cfg=cfg, tcfg=tcfg, fleet=fleet,
+                           fu=fu, mu=mu, ft=ft, mt=mt,
+                           grid=tiny_grid(tcfg))
+
+
+# ------------------------------------------------------- ring buffer unit
+
+
+def test_ring_append_order_and_decode():
+    tr = T.init(4)
+    mask = jnp.array([True, False, True, True])
+    tr = T.append_masked(tr, mask, kind=T.EV_SUBMIT, t=jnp.float32(1.5),
+                         job=jnp.arange(4, dtype=jnp.int32),
+                         stage=jnp.arange(4, dtype=jnp.int32),
+                         cores=jnp.full(4, 2.0), policy=jnp.int32(ASA),
+                         step=jnp.int32(1))
+    ev, meta = T.decode(tr)
+    assert meta == {"capacity": 4, "total": 3, "kept": 3, "dropped": 0,
+                    "overflowed": False}
+    np.testing.assert_array_equal(ev["job"], [0, 2, 3])     # lane order
+    np.testing.assert_array_equal(ev["kind"], [T.EV_SUBMIT] * 3)
+    np.testing.assert_array_equal(ev["t"], [1.5] * 3)
+    assert ev["job"].dtype == np.int32 and ev["t"].dtype == np.float32
+
+    tr = T.append_if(tr, jnp.bool_(True), kind=T.EV_START,
+                     t=jnp.float32(2.0), job=jnp.int32(7), stage=jnp.int32(1),
+                     cores=jnp.float32(2.0), policy=jnp.int32(ASA),
+                     step=jnp.int32(2))
+    ev, meta = T.decode(tr)
+    assert meta["total"] == 4 and not meta["overflowed"]
+    np.testing.assert_array_equal(ev["job"], [0, 2, 3, 7])
+
+    # a False flag appends nothing at all
+    tr2 = T.append_if(tr, jnp.bool_(False), kind=T.EV_CANCEL,
+                      t=jnp.float32(9.0), job=jnp.int32(9), stage=jnp.int32(0),
+                      cores=jnp.float32(1.0), policy=jnp.int32(ASA),
+                      step=jnp.int32(3))
+    np.testing.assert_array_equal(np.asarray(tr2.data), np.asarray(tr.data))
+    assert int(tr2.head) == int(tr.head)
+
+
+def test_ring_overflow_drops_oldest_deterministically():
+    tr = T.init(4)
+    for i in range(6):
+        tr = T.append_if(tr, jnp.bool_(True), kind=T.EV_FINISH,
+                         t=jnp.float32(10.0 + i), job=jnp.int32(i),
+                         stage=jnp.int32(0), cores=jnp.float32(1.0),
+                         policy=jnp.int32(ASA), step=jnp.int32(i + 1))
+    assert bool(T.overflowed(tr))
+    ev, meta = T.decode(tr)
+    assert meta == {"capacity": 4, "total": 6, "kept": 4, "dropped": 2,
+                    "overflowed": True}
+    # oldest two (jobs 0, 1) fell off the front; survivors uncorrupted
+    np.testing.assert_array_equal(ev["job"], [2, 3, 4, 5])
+    np.testing.assert_array_equal(ev["t"], [12.0, 13.0, 14.0, 15.0])
+    np.testing.assert_array_equal(ev["step"], [3, 4, 5, 6])
+
+
+def test_append_segments_equals_chained_masked_appends():
+    k = dict(t=jnp.float32(5.0), policy=jnp.int32(ASA_NAIVE),
+             step=jnp.int32(7))
+    m1 = jnp.array([False, True, True])
+    m2 = jnp.array([True, False, True])
+    job = jnp.arange(3, dtype=jnp.int32)
+    stage = jnp.array([0, 1, 2], jnp.int32)
+    cores = jnp.array([1.0, 2.0, 4.0])
+    segs = [(m1, T.EV_FINISH, job, stage, cores),
+            (m2, T.EV_START, job, stage, cores)]
+    fused = T.append_segments(T.init(8), segs, **k)
+    chained = T.append_masked(T.init(8), m1, kind=T.EV_FINISH, job=job,
+                              stage=stage, cores=cores, **k)
+    chained = T.append_masked(chained, m2, kind=T.EV_START, job=job,
+                              stage=stage, cores=cores, **k)
+    np.testing.assert_array_equal(np.asarray(fused.data),
+                                  np.asarray(chained.data))
+    assert int(fused.head) == int(chained.head) == 4
+
+
+def test_init_rejects_bad_capacity():
+    with pytest.raises(ValueError, match="capacity"):
+        T.init(0)
+    with pytest.raises(ValueError, match="trace_capacity"):
+        XSimConfig(trace_capacity=-1)
+    with pytest.raises(ValueError, match="trace_capacity"):
+        tiny_cfg().with_trace(0)
+
+
+# ------------------------------------------- disabled path == bit-identical
+
+
+def test_tracing_disabled_path_is_bit_identical(runs):
+    """trace=None vs a live ring: every non-trace leaf identical at the
+    bit level — enabling observability must not move a single ULP."""
+    l0 = jax.tree_util.tree_leaves_with_path(runs.fu)
+    l1 = jax.tree_util.tree_leaves_with_path(runs.ft._replace(trace=None))
+    assert len(l0) == len(l1)
+    for (p, a), (_, b) in zip(l0, l1):
+        a, b = np.asarray(a), np.asarray(b)
+        assert a.dtype == b.dtype, jax.tree_util.keystr(p)
+        np.testing.assert_array_equal(a.view(np.uint8), b.view(np.uint8),
+                                      err_msg=jax.tree_util.keystr(p))
+    for k in runs.mu:
+        np.testing.assert_array_equal(np.asarray(runs.mu[k]),
+                                      np.asarray(runs.mt[k]), err_msg=k)
+
+
+def test_small_ring_only_changes_the_trace(runs):
+    """Shrinking the ring (forcing overflow) still perturbs nothing
+    outside the trace, and keeps exactly the newest events."""
+    ocfg = runs.cfg.with_trace(8)
+    fo, _ = run_grid(tiny_grid(ocfg), runs.fleet, pred_seed=3)
+    l0 = jax.tree_util.tree_leaves(runs.fu)
+    l1 = jax.tree_util.tree_leaves(fo._replace(trace=None))
+    for a, b in zip(l0, l1):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    big = T.decode_batch(runs.ft.trace)
+    for i, (ev, meta) in enumerate(T.decode_batch(fo.trace)):
+        bev, bmeta = big[i]
+        assert meta["total"] == bmeta["total"]  # head counts every event
+        assert meta["kept"] == min(meta["total"], 8)
+        assert meta["overflowed"] == (meta["total"] > 8)
+        for f in T.FIELDS:  # survivors = newest slice of the full ring
+            np.testing.assert_array_equal(
+                ev[f], bev[f][meta["total"] - meta["kept"]:], err_msg=f)
+
+
+# --------------------------------------------------- chrome export roundtrip
+
+
+def test_chrome_trace_roundtrip(runs):
+    ct = obs_export.chrome_trace(runs.ft, runs.grid.labels)
+    assert obs_export.validate_chrome(ct) == []
+    decoded = T.decode_batch(runs.ft.trace)
+    steps = np.asarray(runs.ft.steps)
+    by_pid: dict[int, list[dict]] = {}
+    for e in ct["traceEvents"]:
+        by_pid.setdefault(e["pid"], []).append(e)
+    assert len(by_pid) == runs.grid.n
+    for pid, (ev, meta) in enumerate(decoded):
+        evs = by_pid[pid]
+        metas = {e["name"]: e["args"] for e in evs if e["ph"] == "M"}
+        # ring accounting + the steps counter round-trip exactly
+        assert metas["trace_meta"] == {**meta, "steps": int(steps[pid])}
+        kinds = ev["kind"]
+        n_start = int((kinds == T.EV_START).sum())
+        n_cancel = int((kinds == T.EV_CANCEL).sum())
+        spans = [e for e in evs if e["ph"] == "X"]
+        inst = [e for e in evs if e["ph"] == "i"]
+        closed = [e for e in spans if not e["args"].get("open")]
+        # every START becomes exactly one span unless cancelled at its
+        # start instant; instants = submits/cancels/resubmits + finishes
+        # of pre-sweep (warm) runs that never logged a START
+        assert len(spans) == n_start - n_cancel
+        n_orphan_fin = int((kinds == T.EV_FINISH).sum()) - len(closed)
+        assert n_orphan_fin >= 0
+        assert len(inst) == (int((kinds == T.EV_SUBMIT).sum()) + n_cancel
+                             + int((kinds == T.EV_RESUBMIT).sum())
+                             + n_orphan_fin)
+        for e in spans:
+            assert e["dur"] >= 0.0
+    # the strategy labels name the process tracks
+    names = [e["args"]["name"] for e in ct["traceEvents"]
+             if e["ph"] == "M" and e["name"] == "process_name"]
+    assert any("asa" in n for n in names)
+
+
+def test_chrome_trace_requires_a_trace(runs):
+    with pytest.raises(ValueError, match="trace"):
+        obs_export.chrome_trace(runs.fu)
+    with pytest.raises(ValueError, match="trace"):
+        obs_export.jsonl_events(runs.fu)
+    assert obs_export.trace_meta(runs.fu) is None
+
+
+def test_validate_chrome_flags_malformed_events():
+    errs = obs_export.validate_chrome(
+        {"traceEvents": [{"ph": "Z", "pid": 0},
+                         {"ph": "X", "pid": 0, "name": "a", "ts": 1.0},
+                         {"ph": "i", "name": "b", "ts": 1.0}]})
+    assert len(errs) == 4   # bad ph ALSO misses its ts — both named
+    assert any("ph='Z'" in e or "ph=" in e for e in errs)
+    assert any("dur" in e for e in errs)
+    assert any("pid" in e for e in errs)
+
+
+def test_export_validate_cli(tmp_path, runs):
+    good = tmp_path / "trace.json"
+    obs_export.write_chrome_trace(str(good), runs.ft, runs.grid.labels)
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps({"traceEvents": [{"ph": "Z"}]}))
+    assert obs_export.main(["--validate", str(good)]) == 0
+    assert obs_export.main(["--validate", str(good), str(bad)]) == 1
+
+
+# -------------------------------------------------------- differential test
+
+
+def test_replay_chain_waits_matches_compare_metrics(runs):
+    """Waits reconstructed from the trace ALONE (plus the static job
+    table) must equal the engine's settled-timeline metric exactly —
+    same f32 ops, same order — on all 12 mirrored QueueSim scenarios."""
+    twt_engine = np.asarray(runs.mt["twt_s"], np.float32)
+    n_checked = 0
+    for i in range(runs.grid.n):
+        s = jax.tree.map(lambda x, i=i: x[i], runs.ft)
+        pwt, valid, twt = obs_metrics.replay_chain_waits(s)
+        assert twt == twt_engine[i], (i, runs.grid.labels[i])
+        n_checked += valid.sum()
+    assert n_checked > 0  # the comparison is not vacuous
+
+
+def test_replay_requires_lossless_ring(runs):
+    with pytest.raises(ValueError, match="no trace"):
+        obs_metrics.replay_chain_waits(
+            jax.tree.map(lambda x: x[0], runs.fu))
+    ocfg = runs.cfg.with_trace(8)
+    fo, _ = run_grid(tiny_grid(ocfg), runs.fleet, pred_seed=3)
+    s0 = jax.tree.map(lambda x: x[0], fo)
+    assert bool(T.overflowed(s0.trace))
+    with pytest.raises(ValueError, match="overflow"):
+        obs_metrics.replay_chain_waits(s0)
+
+
+# ----------------------------------------------------------- fleet metrics
+
+
+def test_sweep_summary_counters(runs):
+    h = obs_metrics.to_host(
+        obs_metrics.sweep_summary(runs.ft, n_steps=runs.tcfg.n_steps))
+    assert h["n_scenarios"] == runs.grid.n
+    assert h["wf_done"] <= h["wf_total"]
+    assert 0.0 <= h["drain_frac"] <= 1.0
+    assert h["trace_dropped"] == 0
+    # per-kind counters sum to the ring totals (nothing dropped)
+    kinds = sum(h[f"ev_{n}"] for n in T.EVENT_NAMES.values())
+    assert kinds == h["trace_events"]
+    assert len(h["wait_hist"]) == obs_metrics.HIST_BINS
+    assert sum(h["wait_hist"]) > 0
+    # untraced summaries simply omit the trace-derived columns
+    h0 = obs_metrics.to_host(
+        obs_metrics.sweep_summary(runs.fu, n_steps=runs.cfg.n_steps))
+    assert "trace_events" not in h0 and "ev_start" not in h0
+
+
+def test_backfill_hits_on_crafted_scenario():
+    # job1 (submitted later) starts while job0 is still queued → one hit;
+    # job2 is a zero-core background row and never counts
+    s = SimpleNamespace(
+        submit=jnp.array([0.0, 5.0, 1.0]),
+        start=jnp.array([10.0, 6.0, jnp.inf]),
+        status=jnp.array([RUNNING, RUNNING, QUEUED], jnp.int32),
+        cores=jnp.array([4.0, 2.0, 0.0]),
+    )
+    assert int(obs_metrics.backfill_hits(s)) == 1
+    # no overtake once job0 starts first
+    s2 = SimpleNamespace(
+        submit=jnp.array([0.0, 5.0]), start=jnp.array([2.0, 6.0]),
+        status=jnp.array([RUNNING, RUNNING], jnp.int32),
+        cores=jnp.array([4.0, 2.0]))
+    assert int(obs_metrics.backfill_hits(s2)) == 0
+
+
+# --------------------------------------------------------- telemetry schema
+
+
+def test_telemetry_record_roundtrip():
+    rec = telemetry.record(
+        "xsim_throughput",
+        run={"label": "t", "freed_mode": "ref", "n_shards": 2,
+             "traced": True},
+        profile={"scenarios_per_sec": 100.0, "us_per_scenario": 10_000.0},
+        metrics={}, trace=None)
+    assert telemetry.is_telemetry(rec)
+    assert telemetry.validate(rec) == []
+    leg = telemetry.throughput_leg(rec)
+    assert leg["freed_mode"] == "ref" and leg["n_shards"] == 2
+    assert leg["traced"] is True
+    assert leg["scenarios_per_sec"] == 100.0
+
+
+def test_telemetry_missing_profile_is_named():
+    bad = {"telemetry_version": 1, "kind": "xsim_throughput",
+           "run": {}, "metrics": {}, "trace": None}
+    errs = telemetry.validate(bad)
+    assert any("profile" in e for e in errs)
+    with pytest.raises(ValueError, match="profile"):
+        telemetry.throughput_leg(bad)
+    with pytest.raises(ValueError, match="profile"):
+        telemetry.record("xsim_throughput", run={}, profile=None,
+                         metrics={}, trace=None)
+    assert any("kind" in e for e in
+               telemetry.validate({"telemetry_version": 1, "kind": "wat"}))
+
+
+def test_telemetry_stays_importable_without_jax():
+    # bench_gate runs from a bare checkout: the schema module must not
+    # drag jax in (repro is a namespace package, so importing the
+    # submodule alone keeps obs.trace/metrics/export unloaded)
+    import importlib.util
+    import subprocess
+    import sys
+    spec = importlib.util.find_spec("repro.obs.telemetry")
+    src_root = spec.origin.rsplit("/repro/", 1)[0]
+    code = ("import sys; sys.modules['jax'] = None\n"
+            f"sys.path.insert(0, {src_root!r})\n"
+            "import repro.obs.telemetry as t\n"
+            "assert t.validate({}) != []\n")
+    subprocess.run([sys.executable, "-c", code], check=True)
+
+
+# ------------------------------------------------------- bench_gate failures
+
+
+def test_bench_gate_names_schema_failures(tmp_path):
+    from benchmarks import bench_gate
+
+    good = telemetry.record(
+        "xsim_throughput",
+        run={"label": "ok-leg", "freed_mode": "ref"},
+        profile={"scenarios_per_sec": 400.0, "us_per_scenario": 2500.0},
+        metrics={}, trace=None)
+    (tmp_path / "xsim_throughput_ref.json").write_text(json.dumps(good))
+    bad = {"telemetry_version": 1, "kind": "xsim_throughput",
+           "run": {"label": "broken-leg", "freed_mode": "interpret"},
+           "metrics": {}, "trace": None}      # profile section missing
+    (tmp_path / "xsim_throughput_interpret.json").write_text(
+        json.dumps(bad))
+    (tmp_path / "xsim_throughput_garbled.json").write_text("{nope")
+
+    legs, failures = bench_gate.collect_legs(tmp_path)
+    assert list(legs) == ["ref"]              # only the valid leg merged
+    assert len(failures) == 2
+    named = " | ".join(failures)
+    assert "profile" in named                 # says WHAT is missing
+    assert "broken-leg" in named              # ...and WHICH leg
+    assert "interpret" in named
+    assert "xsim_throughput_garbled.json" in named
+
+
+def test_bench_gate_gate_checks(tmp_path):
+    from benchmarks import bench_gate
+
+    legs = {"ref": {"scenarios_per_sec": 90.0, "us_per_scenario": 11_000.0}}
+    baseline = {"legs": {"ref": {"scenarios_per_sec": 100.0,
+                                 "us_per_scenario": 10_000.0}}}
+    rec, fails = bench_gate.gate(legs, baseline, tolerance=0.25)
+    assert rec["ok"] and not fails            # within tolerance both ways
+    rec, fails = bench_gate.gate(
+        {"ref": {"scenarios_per_sec": 50.0, "us_per_scenario": 20_000.0}},
+        baseline, tolerance=0.25)
+    assert not rec["ok"] and len(fails) == 2
+    _, fails = bench_gate.gate({}, baseline, tolerance=0.25)
+    assert fails and "missing" in fails[0]
+
+
+# --------------------------------------------------------- CLI flag contract
+
+
+def test_throughput_flags_validate_up_front(monkeypatch, capsys):
+    from benchmarks import xsim_throughput
+
+    def expect_exit(argv):
+        monkeypatch.setattr("sys.argv", ["xsim_throughput"] + argv)
+        with pytest.raises(SystemExit) as e:
+            xsim_throughput.main()
+        assert e.value.code == 2              # argparse error, pre-jit
+        return capsys.readouterr().err
+
+    err = expect_exit(["--smoke", "--trace", "t.json", "--no-trace"])
+    assert "mutually exclusive" in err
+    err = expect_exit(["--smoke", "--trace-capacity", "64"])
+    assert "--trace" in err
+    err = expect_exit(["--smoke", "--trace", "t.json",
+                       "--trace-capacity", "0"])
+    assert ">= 1" in err
+
+
+def test_run_py_flags_validate_up_front(monkeypatch, capsys):
+    # run.py parses inside __main__: re-exec its arg handling via runpy
+    # (the bad flag combinations exit before any engine work starts)
+    import runpy
+    import sys
+
+    def run_main(argv):
+        monkeypatch.setattr(sys, "argv", ["benchmarks/run.py"] + argv)
+        with pytest.raises(SystemExit) as e:
+            runpy.run_module("benchmarks.run", run_name="__main__")
+        return e.value.code, capsys.readouterr().err
+
+    code, err = run_main(["--engine", "event", "--trace", "t.json"])
+    assert code == 2 and "--engine xsim" in err
+    code, err = run_main(["--engine", "xsim", "--trace", "t.json",
+                          "--no-trace"])
+    assert code == 2 and "mutually exclusive" in err
+    code, err = run_main(["--engine", "event", "--json", "x.json"])
+    assert code == 2 and "--engine xsim" in err

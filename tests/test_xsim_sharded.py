@@ -188,6 +188,50 @@ def test_sharded_batched_metrics_matches_to_reduction_order():
                                    rtol=1e-6, atol=0.0)
 
 
+@pytest.mark.parametrize("k", [1, 2, 4, 8])
+def test_traced_sweep_bit_identical_across_shards(k):
+    """Observability under shard_map: a traced sharded sweep must (a)
+    leave every non-trace leaf bit-identical to the UNTRACED vmap run
+    (the trace=None elision contract, per device) and (b) produce the
+    very same event rings the traced vmap run records — tracing must
+    not observe the device topology."""
+    if N_DEV < k:
+        pytest.skip(f"needs {k} devices, have {N_DEV} (set XLA_FLAGS="
+                    "--xla_force_host_platform_device_count=8)")
+    cfg = tiny_cfg()
+    tcfg = cfg.with_trace(64)
+    grid_t = tiny_grid(tcfg)                  # B = 12: pads on k = 8
+    fleet = policies.init_fleet(int(grid_t.geo_idx.max()) + 1)
+    f0, m0 = run_grid(tiny_grid(cfg), fleet, pred_seed=3)
+    ftv, _ = run_grid(grid_t, fleet, pred_seed=3)
+    ftk, mtk = run_grid(grid_t, fleet, pred_seed=3, n_shards=k)
+    assert f0.trace is None and ftk.trace is not None
+    assert_trees_equal(f0, ftk._replace(trace=None))
+    assert_trees_equal(m0, mtk)
+    assert_trees_equal(ftv.trace, ftk.trace)  # rings device-count-free
+
+
+@needs(N_DEV < 2, reason="needs ≥2 devices")
+def test_sharded_sweep_summary_matches_vmap():
+    """obs.metrics fleet reduction inside shard_map (psum over the
+    scenarios mesh, pad rows zero-weighted): integer counters exactly
+    equal the vmap reduction, float columns to reduction order."""
+    from repro.obs import metrics as obs_metrics
+
+    cfg = tiny_cfg().with_trace(64)
+    grid = tiny_grid(cfg, policy_ids=(ASA,), n_seeds=3)   # B = 9, pads
+    fleet = policies.init_fleet(int(grid.geo_idx.max()) + 1)
+    final, _ = run_grid(grid, fleet, pred_seed=5)
+    s0 = obs_metrics.to_host(
+        obs_metrics.sweep_summary(final, n_steps=cfg.n_steps))
+    s2 = obs_metrics.to_host(obs_metrics.sharded_sweep_summary(
+        final, make_scenarios_mesh(2), n_steps=cfg.n_steps))
+    assert sorted(s0) == sorted(s2)
+    for k in s0:
+        np.testing.assert_allclose(s2[k], s0[k], rtol=1e-6, atol=0.0,
+                                   err_msg=k)
+
+
 @needs(N_DEV < 2, reason="needs ≥2 devices")
 def test_sharded_rl_replay_buffers_bit_identical():
     from repro.rl import policy as rl_policy
