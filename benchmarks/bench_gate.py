@@ -1,4 +1,5 @@
-"""Bench-trajectory regression gate for the xsim throughput matrix.
+"""Bench-trajectory regression gate for the xsim throughput matrix and
+the ASA serving benchmark.
 
 Collects the per-leg ``xsim_throughput_*.json`` records the CI matrix
 uploads (ref / interpret / sharded / traced), merges them into one
@@ -9,6 +10,16 @@ committed baseline in ``benchmarks/baselines/xsim_throughput.json``, or
 when its us_per_scenario exceeds the mirrored ceiling (baseline ÷ (1 −
 tolerance) — the two fields are reciprocal, so both checks trip at the
 same throughput).
+
+``serve_latency*.json`` legs (benchmarks/serve_latency.py) are gated the
+same way against ``benchmarks/baselines/serve_latency.json``:
+``decisions_per_sec`` may not drop more than the tolerance below its
+baseline, and the ``p99_ms`` decision latency may not exceed its ceiling
+(baseline ÷ (1 − tolerance)). Unlike the reciprocal throughput pair,
+rate and tail latency CAN regress independently (a stall lengthens the
+tail without moving the mean rate much), so both serve gates add signal.
+Pass ``--no-serve`` to skip serve gating when replaying old
+throughput-only artifact sets.
 
 Legs are schema-v1 ``repro.obs.telemetry`` records (the only format the
 runners emit since the observability PR): the gated numbers live in the
@@ -49,6 +60,8 @@ from repro.obs import telemetry  # noqa: E402  (needs the path shim)
 
 BASELINE_DEFAULT = Path(__file__).resolve().parent / "baselines" \
     / "xsim_throughput.json"
+SERVE_BASELINE_DEFAULT = Path(__file__).resolve().parent / "baselines" \
+    / "serve_latency.json"
 
 
 def leg_key(leg: dict) -> str:
@@ -105,6 +118,91 @@ def collect_legs(bench_dir: Path) -> tuple[dict[str, dict], list[str]]:
             continue
         legs[leg_key(leg)] = leg
     return legs, failures
+
+
+def serve_leg_key(leg: dict) -> str:
+    """Stable merge key for serving legs: shard count only (the smoke
+    and full replays share one compiled shape; the label disambiguates
+    in the merged artifact, not in the gate)."""
+    shards = int(leg.get("n_shards", 1) or 1)
+    return "serve" if shards == 1 else f"serve-shards{shards}"
+
+
+def collect_serve_legs(bench_dir: Path) -> tuple[dict[str, dict],
+                                                 list[str]]:
+    """(legs, failures) for serve_latency*.json — same contract as
+    ``collect_legs``: schema violations are named failures, never
+    silent skips."""
+    legs: dict[str, dict] = {}
+    failures: list[str] = []
+    for path in sorted(bench_dir.rglob("serve_latency*.json")):
+        try:
+            rec = json.loads(path.read_text())
+        except (OSError, json.JSONDecodeError) as e:
+            failures.append(f"serve leg file {path} is unreadable: {e}")
+            continue
+        try:
+            leg = telemetry.serve_leg(rec)
+        except ValueError as e:
+            run = rec.get("run", {}) if isinstance(rec, dict) else {}
+            label = run.get("label") or path.name
+            failures.append(f"serve leg ({label}, {path}) failed "
+                            f"telemetry validation: {e}")
+            continue
+        leg["profile"] = rec["profile"]
+        leg["metrics"] = rec.get("metrics")
+        legs[serve_leg_key(leg)] = leg
+    return legs, failures
+
+
+def gate_serve(legs: dict[str, dict], baseline: dict,
+               tolerance: float) -> tuple[dict, list[str]]:
+    """Serve-side gate: for every baseline leg, ``decisions_per_sec``
+    must hold the floor baseline × (1 − tolerance) and ``p99_ms`` must
+    stay under the ceiling baseline ÷ (1 − tolerance). Missing gated
+    legs and baseline-gated metrics missing from a record are failures,
+    exactly as in :func:`gate`."""
+    failures: list[str] = []
+    checks: dict[str, dict] = {}
+    for key, base in baseline["legs"].items():
+        rec = legs.get(key)
+        if rec is None:
+            failures.append(f"gated serve leg {key!r} missing from the "
+                            f"merged bench set (have: {sorted(legs)})")
+            continue
+        checks[key] = {"ok": True}
+        if "decisions_per_sec" in base:
+            floor = base["decisions_per_sec"] * (1.0 - tolerance)
+            dps = float(rec["decisions_per_sec"])
+            ok = dps >= floor
+            checks[key].update(decisions_per_sec=dps,
+                               dps_baseline=base["decisions_per_sec"],
+                               dps_floor=floor, dps_ok=ok)
+            checks[key]["ok"] &= ok
+            if not ok:
+                failures.append(
+                    f"{key}: {dps:.0f} decisions/sec is below the "
+                    f"regression floor {floor:.0f} (baseline "
+                    f"{base['decisions_per_sec']:.0f} − {tolerance:.0%})")
+        if "p99_ms" in base:
+            if "p99_ms" not in rec:
+                failures.append(f"{key}: record carries no p99_ms but "
+                                f"the baseline gates it")
+                checks[key]["ok"] = False
+                continue
+            ceil = base["p99_ms"] / (1.0 - tolerance)
+            p99 = float(rec["p99_ms"])
+            ok = p99 <= ceil
+            checks[key].update(p99_ms=p99, p99_baseline=base["p99_ms"],
+                               p99_ceiling=ceil, p99_ok=ok)
+            checks[key]["ok"] &= ok
+            if not ok:
+                failures.append(
+                    f"{key}: p99 decision latency {p99:.0f} ms is above "
+                    f"the regression ceiling {ceil:.0f} (baseline "
+                    f"{base['p99_ms']:.0f} ÷ (1 − {tolerance:.0%}))")
+    return {"tolerance": tolerance, "checks": checks,
+            "ok": not failures}, failures
 
 
 def gate(legs: dict[str, dict], baseline: dict,
@@ -177,6 +275,13 @@ def main() -> int:
     ap.add_argument("--baseline", type=Path, default=BASELINE_DEFAULT,
                     help="committed baseline record (default: "
                          "benchmarks/baselines/xsim_throughput.json)")
+    ap.add_argument("--serve-baseline", type=Path,
+                    default=SERVE_BASELINE_DEFAULT,
+                    help="committed serving baseline (default: "
+                         "benchmarks/baselines/serve_latency.json)")
+    ap.add_argument("--no-serve", action="store_true",
+                    help="skip the serve_latency gate (replaying "
+                         "throughput-only artifact sets)")
     ap.add_argument("--out", type=Path, default=Path("BENCH_xsim.json"),
                     help="merged bench-trajectory artifact to write")
     ap.add_argument("--tolerance", type=float, default=0.25,
@@ -192,9 +297,25 @@ def main() -> int:
         return 1
     gate_rec, failures = gate(legs, baseline, args.tolerance)
     failures = schema_failures + failures
+
+    serve_legs: dict[str, dict] = {}
+    serve_baseline = None
+    serve_gate_rec = None
+    if not args.no_serve:
+        serve_baseline = json.loads(args.serve_baseline.read_text())
+        serve_legs, serve_schema_failures = collect_serve_legs(
+            args.bench_dir)
+        serve_gate_rec, serve_failures = gate_serve(
+            serve_legs, serve_baseline, args.tolerance)
+        failures += serve_schema_failures + serve_failures
+        serve_gate_rec["ok"] = not (serve_schema_failures
+                                    + serve_failures)
     gate_rec["ok"] = not failures
 
-    merged = {"legs": legs, "baseline": baseline, "gate": gate_rec}
+    merged = {"legs": legs, "baseline": baseline, "gate": gate_rec,
+              "serve_legs": serve_legs,
+              "serve_baseline": serve_baseline,
+              "serve_gate": serve_gate_rec}
     args.out.parent.mkdir(parents=True, exist_ok=True)
     args.out.write_text(json.dumps(merged, indent=2))
 
@@ -225,6 +346,16 @@ def main() -> int:
                       f"events {tr.get('events_total')} "
                       f"(dropped {tr.get('events_dropped', 0)}, "
                       f"capacity {tr.get('capacity')}/scenario)")
+    for key in sorted(serve_legs):
+        rec = serve_legs[key]
+        print(f"bench_gate/{key}: "
+              f"{rec.get('decisions_per_sec', 0):.0f} decisions/sec, "
+              f"p50 {rec.get('p50_ms', 0):.1f} ms / "
+              f"p99 {rec.get('p99_ms', 0):.1f} ms "
+              f"(tenants={rec.get('n_tenants')}, "
+              f"batch={rec.get('batch_size')}, "
+              f"shards={rec.get('n_shards', 1)}, "
+              f"backend={rec.get('backend')})")
     if failures:
         for f in failures:
             print(f"bench_gate: FAIL {f}", file=sys.stderr)

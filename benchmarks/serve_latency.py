@@ -1,0 +1,258 @@
+"""ASA-as-a-service latency benchmark: replay an xsim fleet as traffic.
+
+xsim doubles as the load generator: one batched sweep simulates a fleet
+of ASA-driven workflow streams, and the per-stage (submit, start, wait)
+events of every scenario are replayed — in event-time order — as live
+requests against ``repro.serve.loop.ASAServer``.  Each scenario is one
+tenant: its first request asks the stage-0 submit-lead-time (a pure
+decision), then every observed stage wait feeds the tenant's posterior
+(observe + decide in one request).  The serve loop batches the stream
+through the jitted decision core exactly as production traffic would.
+
+Reported (telemetry schema v1, kind ``serve_latency``):
+
+* ``p50_ms`` / ``p99_ms`` — per-request decision latency, submit() to
+  future resolution, across the whole replay;
+* ``decisions_per_sec`` — total answered decisions over the replay wall
+  time — the CI-gated sustained rate;
+* run identity: tenants served, table slots, batch size, shard count.
+
+The run ends with a **restart check**: the server state snapshots
+through ``runtime.checkpoint``, a second server restores from it, and
+every tenant's decision must be bitwise identical between the two — the
+paper's estimator state survives a server restart exactly.  A mismatch
+(or fewer than ``--min-tenants`` concurrent streams) exits non-zero.
+
+  python -m benchmarks.serve_latency --smoke          # CI-sized replay
+  python -m benchmarks.serve_latency                  # 3 replays
+  python -m benchmarks.serve_latency --shards 8 --json bench/serve.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import threading
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.obs import telemetry
+from repro.serve.loop import ASAServer, ServeConfig
+from repro.xsim import policies
+from repro.xsim.grid import XSimConfig, make_grid, run_grid, stage_waits
+from repro.xsim.state import ASA
+
+
+def build_traffic(n_seeds: int, seed: int = 0):
+    """Simulate a fleet and turn it into a request stream.
+
+    Returns ``(events, n_tenants)`` where ``events`` is a list of
+    ``(t_sim, tenant, observed_wait_or_None)`` sorted by simulated event
+    time — the order a live fleet would have produced them.
+    """
+    cfg = XSimConfig(n_warm=16, n_backlog=12, n_arrivals=16, max_stages=9,
+                     t0=3600.0)
+    grid = make_grid(cfg, policy_ids=(ASA,), n_seeds=n_seeds,
+                     shrink=1 / 64.0, seed=seed)
+    fleet = policies.init_fleet(int(grid.geo_idx.max()) + 1)
+    final, _ = run_grid(grid, fleet)
+    waits, valid = stage_waits(final, cfg)
+    sl = slice(cfg.max_jobs - cfg.max_stages, cfg.max_jobs)
+    starts = np.asarray(final.start[:, sl])
+
+    events: list[tuple[float, int, float | None]] = []
+    for t in range(grid.n):
+        # the stream opens with the stage-0 submit-lead query (pure
+        # decision at the submission epoch) ...
+        events.append((cfg.t0, t, None))
+        # ... then every observed stage start feeds the posterior
+        for y in range(cfg.max_stages):
+            if valid[t, y]:
+                events.append((float(starts[t, y]), t, float(waits[t, y])))
+    events.sort(key=lambda e: (e[0], e[1]))
+    return events, grid.n
+
+
+def replay(server: ASAServer, events, replays: int) -> dict:
+    """Open-loop replay: submit the stream as fast as the queue takes it,
+    measure per-request latency (submit → future resolution) and the
+    sustained decision rate."""
+    lat: list[float] = []
+    lat_lock = threading.Lock()
+
+    def stamp(t_sub):
+        def cb(fut):
+            if fut.exception() is None:
+                dt = time.perf_counter() - t_sub
+                with lat_lock:
+                    lat.append(dt)
+        return cb
+
+    futures = []
+    t0 = time.perf_counter()
+    for rep in range(replays):
+        for _t_sim, tenant, wait in events:
+            fut = server.submit(tenant, wait)
+            fut.add_done_callback(stamp(time.perf_counter()))
+            futures.append(fut)
+    for fut in futures:
+        fut.result(timeout=300)
+    wall = time.perf_counter() - t0
+
+    a = np.asarray(lat) * 1e3
+    return {
+        "n_requests": len(futures),
+        "wall_s": wall,
+        "p50_ms": float(np.percentile(a, 50)),
+        "p99_ms": float(np.percentile(a, 99)),
+        "mean_ms": float(a.mean()),
+        "max_ms": float(a.max()),
+        "decisions_per_sec": len(futures) / wall,
+    }
+
+
+def restart_check(server: ASAServer, cfg: ServeConfig, tenants: int,
+                  mesh=None) -> bool:
+    """Snapshot → restore → every tenant's decision bitwise-identical."""
+    server.save(step=999)
+    restored = ASAServer.restore(cfg, step=999, mesh=mesh)
+    ok = True
+    for batch_start in range(0, tenants, cfg.batch_size):
+        ts = range(batch_start, min(batch_start + cfg.batch_size, tenants))
+        fa = [server.submit(t) for t in ts]
+        fb = [restored.submit(t) for t in ts]
+        server.step_once(wait_s=0)
+        restored.step_once(wait_s=0)
+        for a, b in zip(fa, fb):
+            da, db = a.result(timeout=60), b.result(timeout=60)
+            if (da.lead_s, da.expected_s, da.entropy) != \
+                    (db.lead_s, db.expected_s, db.entropy):
+                print(f"restart_check: tenant {da.tenant} diverged: "
+                      f"{da} vs {db}")
+                ok = False
+    return ok
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="one replay of the 1026-tenant stream (CI job)")
+    ap.add_argument("--replays", type=int, default=None,
+                    help="stream replays (default: 1 smoke, 3 full)")
+    ap.add_argument("--seeds", type=int, default=57, metavar="N",
+                    help="xsim seeds per grid cell; 18 cells × N seeds "
+                         "tenants (default 57 -> 1026 tenants)")
+    ap.add_argument("--slots", type=int, default=1536,
+                    help="tenant-table capacity (default 1536)")
+    ap.add_argument("--batch-size", type=int, default=256)
+    ap.add_argument("--shards", type=int, default=None, metavar="N",
+                    help="shard_map the query axis over the first N "
+                         "devices (default: single-device vmap)")
+    ap.add_argument("--min-tenants", type=int, default=1000,
+                    help="fail unless at least this many concurrent "
+                         "tenant streams were served (default 1000)")
+    ap.add_argument("--ckpt-dir", type=Path, default=None,
+                    help="checkpoint dir for the restart check (default: "
+                         "a tmp dir)")
+    ap.add_argument("--json", type=Path, default=None, metavar="PATH",
+                    help="write the telemetry record (CI artifact)")
+    args = ap.parse_args()
+    if args.shards is not None:
+        from repro.launch.mesh import shards_arg_error
+        err = shards_arg_error(args.shards)
+        if err is not None:
+            ap.error(err)
+        if args.batch_size % args.shards != 0:
+            ap.error(f"--batch-size {args.batch_size} not divisible by "
+                     f"--shards {args.shards}")
+    replays = args.replays or (1 if args.smoke else 3)
+    label = "smoke" if args.smoke else f"replay{replays}"
+
+    t0 = time.perf_counter()
+    events, n_tenants = build_traffic(args.seeds)
+    loadgen_s = time.perf_counter() - t0
+    n_obs = sum(1 for e in events if e[2] is not None)
+    print(f"serve_latency/loadgen: {n_tenants} tenants, "
+          f"{len(events)} events ({n_obs} observations) in {loadgen_s:.1f}s")
+    if n_tenants > args.slots:
+        ap.error(f"--slots {args.slots} < {n_tenants} tenants")
+
+    ckpt_dir = args.ckpt_dir
+    if ckpt_dir is None:
+        import tempfile
+        ckpt_dir = Path(tempfile.mkdtemp(prefix="serve_latency_ckpt_"))
+    cfg = ServeConfig(n_slots=args.slots, batch_size=args.batch_size,
+                      n_shards=args.shards,
+                      checkpoint_dir=str(ckpt_dir))
+    server = ASAServer(cfg)
+
+    # warm the compile cache outside the timed replay (one compiled shape
+    # serves every batch)
+    t0 = time.perf_counter()
+    warm = server.submit(0)
+    server.step_once(wait_s=0)
+    warm.result(timeout=300)
+    compile_s = time.perf_counter() - t0
+
+    server.start()
+    try:
+        prof = replay(server, events, replays)
+    finally:
+        server.stop()
+    prof["compile_s"] = compile_s
+    prof["loadgen_s"] = loadgen_s
+    stats = server.stats
+    prof["batches"] = stats["batches"]
+    prof["batch_fill_mean"] = (stats["decisions"]
+                               / max(stats["batches"], 1))
+
+    sustained = stats["tenants"]
+    ok_tenants = sustained >= args.min_tenants
+    ok_restart = restart_check(server, cfg, n_tenants, mesh=server._mesh)
+
+    shards = args.shards or 1
+    print(f"serve_latency/{label}: p50={prof['p50_ms']:.2f}ms "
+          f"p99={prof['p99_ms']:.2f}ms "
+          f"decisions_per_sec={prof['decisions_per_sec']:.0f} "
+          f"({prof['n_requests']} requests, {stats['batches']} batches, "
+          f"fill={prof['batch_fill_mean']:.1f}/{args.batch_size}, "
+          f"tenants={sustained}, shards={shards}, "
+          f"backend={jax.default_backend()})")
+    print(f"serve_latency/{label}/checks: tenants>={args.min_tenants}: "
+          f"{'ok' if ok_tenants else 'FAIL'}; restart bitwise: "
+          f"{'ok' if ok_restart else 'FAIL'}")
+
+    rec = telemetry.record(
+        "serve_latency",
+        run={
+            "label": label,
+            "n_tenants": sustained,
+            "n_slots": args.slots,
+            "batch_size": args.batch_size,
+            "n_shards": shards,
+            "n_devices": len(jax.devices()),
+            "backend": jax.default_backend(),
+            "replays": replays,
+            "loadgen_seeds": args.seeds,
+            "restart_bitwise": ok_restart,
+        },
+        profile=prof,
+        metrics={
+            "requests_total": prof["n_requests"],
+            "observations_total": n_obs * replays,
+            "decisions_total": stats["decisions"],
+            "deferred_end": stats["deferred"],
+        },
+        trace=None,
+    )
+    if args.json is not None:
+        args.json.parent.mkdir(parents=True, exist_ok=True)
+        args.json.write_text(json.dumps(rec, indent=2))
+    return 0 if (ok_tenants and ok_restart) else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

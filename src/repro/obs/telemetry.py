@@ -29,7 +29,8 @@ from typing import Any
 
 TELEMETRY_VERSION = 1
 
-KINDS = ("xsim_throughput", "xsim_strategies", "rl_train")
+KINDS = ("xsim_throughput", "xsim_strategies", "rl_train",
+         "serve_latency")
 
 # sections a record of each kind must carry ("trace" may be None but the
 # key itself must exist — it says "tracing was off", not "schema unknown")
@@ -37,10 +38,15 @@ REQUIRED_SECTIONS: dict[str, tuple[str, ...]] = {
     "xsim_throughput": ("run", "profile", "metrics", "trace"),
     "xsim_strategies": ("run", "profile", "metrics", "trace"),
     "rl_train": ("run", "profile", "metrics", "trace"),
+    "serve_latency": ("run", "profile", "metrics", "trace"),
 }
 
 # profile keys bench_gate gates on for throughput legs
 PROFILE_REQUIRED = ("scenarios_per_sec", "us_per_scenario")
+
+# profile keys bench_gate gates on for serving legs (benchmarks/
+# serve_latency.py): decision latency percentiles + sustained rate
+SERVE_PROFILE_REQUIRED = ("p50_ms", "p99_ms", "decisions_per_sec")
 
 
 def record(kind: str, *, run: dict[str, Any], profile: dict[str, Any],
@@ -93,6 +99,10 @@ def validate(rec: Any) -> list[str]:
         for k in PROFILE_REQUIRED:
             if k not in prof:
                 errs.append(f"profile missing {k!r}")
+    if kind == "serve_latency" and isinstance(prof, dict):
+        for k in SERVE_PROFILE_REQUIRED:
+            if k not in prof:
+                errs.append(f"profile missing {k!r}")
     return errs
 
 
@@ -112,4 +122,25 @@ def throughput_leg(rec: dict[str, Any]) -> dict[str, Any]:
     leg["n_shards"] = run.get("n_shards")
     leg["traced"] = bool(run.get("traced", False))
     leg["label"] = run.get("label", "")
+    return leg
+
+
+def serve_leg(rec: dict[str, Any]) -> dict[str, Any]:
+    """Flatten a serve_latency record into bench_gate's leg view:
+    the gated profile (p50/p99 decision latency, decisions/sec) plus the
+    run identity (shards, tenants, batch size).  Raises ValueError naming
+    what is missing, like ``throughput_leg``."""
+    errs = validate(rec)
+    if errs:
+        raise ValueError("; ".join(errs))
+    if rec.get("kind") != "serve_latency":
+        raise ValueError(f"kind is {rec.get('kind')!r}, "
+                         "expected 'serve_latency'")
+    run, prof = rec["run"], rec["profile"]
+    leg = dict(prof)
+    leg["n_shards"] = run.get("n_shards")
+    leg["label"] = run.get("label", "")
+    for k in ("n_tenants", "n_slots", "batch_size", "backend"):
+        if k in run:
+            leg[k] = run[k]
     return leg

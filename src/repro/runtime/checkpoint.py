@@ -16,10 +16,16 @@ container scale by the tests):
     canonical).
   * atomic publish: data files land first, `manifest.json` last, so a
     half-written checkpoint is never restorable; `latest_step` scans only
-    manifest-complete directories.
+    manifest-complete directories.  A reused ``_tmp_step_*`` dir (a prior
+    save of the same step crashed mid-write) is cleared before writing,
+    so stale leaf files from the dead attempt can never be published
+    under a fresh manifest.
   * async save: `save_async` snapshots to host memory synchronously (the
     jax.device_get) and hands serialization to a daemon thread — the train
-    loop blocks only for the copy, not the compression/IO.
+    loop blocks only for the copy, not the compression/IO.  It returns an
+    ``AsyncSave`` handle whose ``result()``/``join()`` RE-RAISE any
+    background failure: a failed save must surface in the caller, not
+    report success while the "latest" checkpoint silently stays stale.
 """
 
 from __future__ import annotations
@@ -75,6 +81,15 @@ def save(tree, directory: str | Path, step: int, *, level: int = 3) -> Path:
     directory = Path(directory)
     tmp = directory / f"_tmp_step_{step}"
     final = directory / f"step_{step}"
+    if tmp.exists():
+        # a previous save of this step died mid-write: clear its leftovers
+        # so orphaned leaf files can't ride along under the new manifest
+        # (restore reads strictly by manifest, but latest_step-driven
+        # tooling lists the dir — and a renamed tree must be exactly what
+        # this save wrote)
+        for stale in tmp.iterdir():
+            if stale.is_file():
+                stale.unlink()
     tmp.mkdir(parents=True, exist_ok=True)
     codec, compress = _compressor(level)
     leaves, _ = _leaf_paths(tree)
@@ -95,13 +110,59 @@ def save(tree, directory: str | Path, step: int, *, level: int = 3) -> Path:
     return final
 
 
-def save_async(tree, directory: str | Path, step: int) -> threading.Thread:
-    """Snapshot to host now; serialize+write in the background."""
+class AsyncSave:
+    """Handle for a background ``save``; failures re-raise in the caller.
+
+    ``join()``/``result()`` block for the writer thread and re-raise
+    whatever it raised — a background save that failed must not look like
+    a success (the pre-handle daemon thread swallowed every exception, so
+    the "latest" checkpoint silently stayed stale).  ``result()`` returns
+    the published checkpoint directory.
+    """
+
+    def __init__(self, thread: threading.Thread, step: int):
+        self._thread = thread
+        self.step = step
+        self._exc: BaseException | None = None
+        self._path: Path | None = None
+
+    def done(self) -> bool:
+        return not self._thread.is_alive()
+
+    def join(self, timeout: float | None = None) -> None:
+        self._thread.join(timeout)
+        if self._thread.is_alive():
+            raise TimeoutError(
+                f"async save of step {self.step} still running")
+        if self._exc is not None:
+            raise self._exc
+
+    def result(self, timeout: float | None = None) -> Path:
+        self.join(timeout)
+        assert self._path is not None
+        return self._path
+
+
+def save_async(tree, directory: str | Path, step: int, *,
+               level: int = 3) -> AsyncSave:
+    """Snapshot to host now; serialize+write in the background.
+
+    Blocks only for the device→host copy.  Returns an :class:`AsyncSave`
+    whose ``result()``/``join()`` re-raise any background failure.
+    """
     host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
-    t = threading.Thread(target=save, args=(host_tree, directory, step),
-                         daemon=True)
+    handle: AsyncSave
+
+    def _work():
+        try:
+            handle._path = save(host_tree, directory, step, level=level)
+        except BaseException as e:  # surfaced via join()/result()
+            handle._exc = e
+
+    t = threading.Thread(target=_work, daemon=True)
+    handle = AsyncSave(t, step)
     t.start()
-    return t
+    return handle
 
 
 def latest_step(directory: str | Path) -> int | None:

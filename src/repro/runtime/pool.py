@@ -5,6 +5,23 @@ batch job that starts contributes an Allocation (a set of slices); the pool
 presents them as one elastic inventory from which stages claim resources.
 Offer/claim semantics mirror Mesos offers; revocation mirrors preemption /
 node failure (the fault module drives it).
+
+Accounting is exact: a ``Claim`` records the per-allocation breakdown
+``{alloc_id: slices}`` of what it holds, so release and revocation give
+back precisely the slices each allocation contributed.  The pool invariant
+
+    sum(claim.slices) == sum(claimed_per_alloc)  and
+    0 <= claimed_per_alloc[a] <= alloc[a].slices for every allocation
+
+holds after every operation (``check_invariants`` verifies it; the
+hypothesis property test in tests/test_pool_properties.py drives random
+claim/release/revoke/expiry mixes against it).
+
+Allocations may carry an ``expires_at`` walltime (batch jobs end):
+``sweep_expired(now)`` lapses every allocation past its deadline,
+revoking its claims through the normal ``on_revoke`` path.  ``claim`` and
+``available`` accept an optional ``now`` that sweeps first, so expired
+inventory is never claimable.
 """
 
 from __future__ import annotations
@@ -27,7 +44,13 @@ class Allocation:
 class Claim:
     id: int
     slices: int
-    alloc_ids: list[int]
+    # exact per-allocation breakdown of the claim — release/revoke give
+    # back precisely what each allocation contributed
+    alloc_slices: dict[int, int] = field(default_factory=dict)
+
+    @property
+    def alloc_ids(self) -> list[int]:
+        return list(self.alloc_slices)
 
 
 class ResourcePool:
@@ -47,28 +70,58 @@ class ResourcePool:
         return a
 
     def remove_allocation(self, alloc_id: int) -> list[Claim]:
-        """Allocation ended/failed: revoke claims that used it."""
+        """Allocation ended/failed: revoke claims that used it.
+
+        A revoked claim that spanned several allocations hands its slices
+        back to every *surviving* allocation — the whole claim dies (its
+        holder lost part of its resources), but the other allocations'
+        capacity must not leak.
+        """
         self._allocs.pop(alloc_id, None)
         self._claimed_per_alloc.pop(alloc_id, None)
-        hit = [c for c in self._claims.values() if alloc_id in c.alloc_ids]
+        hit = [c for c in self._claims.values()
+               if alloc_id in c.alloc_slices]
         for c in hit:
             del self._claims[c.id]
+            for aid, amt in c.alloc_slices.items():
+                if aid in self._claimed_per_alloc:
+                    self._claimed_per_alloc[aid] -= amt
             for cb in self.on_revoke:
                 cb(c)
         return hit
 
+    def sweep_expired(self, now: float) -> list[Claim]:
+        """Lapse every allocation whose ``expires_at`` has passed.
+
+        The batch system reclaimed those nodes whether we noticed or not;
+        this makes the pool notice: each expired allocation leaves the
+        inventory and its claims are revoked through ``on_revoke`` exactly
+        as a failure would.  Returns the revoked claims.
+        """
+        expired = [a.id for a in self._allocs.values()
+                   if a.expires_at is not None and a.expires_at <= now]
+        revoked: list[Claim] = []
+        for aid in expired:
+            revoked.extend(self.remove_allocation(aid))
+        return revoked
+
     # ------------------------------------------------------------- demand
-    def available(self) -> int:
+    def available(self, now: Optional[float] = None) -> int:
+        if now is not None:
+            self.sweep_expired(now)
         return sum(
             a.slices - self._claimed_per_alloc.get(a.id, 0)
             for a in self._allocs.values() if a.healthy)
 
-    def claim(self, slices: int) -> Optional[Claim]:
+    def claim(self, slices: int,
+              now: Optional[float] = None) -> Optional[Claim]:
         """First-fit claim across allocations (may span several)."""
+        if now is not None:
+            self.sweep_expired(now)
         if slices > self.available():
             return None
         remaining = slices
-        used: list[int] = []
+        used: dict[int, int] = {}
         for a in self._allocs.values():
             if not a.healthy:
                 continue
@@ -76,7 +129,7 @@ class ResourcePool:
             take = min(free, remaining)
             if take > 0:
                 self._claimed_per_alloc[a.id] += take
-                used.append(a.id)
+                used[a.id] = take
                 remaining -= take
             if remaining == 0:
                 break
@@ -88,11 +141,32 @@ class ResourcePool:
         if claim.id not in self._claims:
             return
         del self._claims[claim.id]
-        # proportional release (claims record only the alloc ids)
-        remaining = claim.slices
-        for aid in claim.alloc_ids:
-            if aid not in self._claimed_per_alloc:
-                continue
-            give = min(self._claimed_per_alloc[aid], remaining)
-            self._claimed_per_alloc[aid] -= give
-            remaining -= give
+        for aid, amt in claim.alloc_slices.items():
+            if aid in self._claimed_per_alloc:
+                self._claimed_per_alloc[aid] -= amt
+
+    # ---------------------------------------------------------- invariant
+    def check_invariants(self) -> list[str]:
+        """Return violations of the pool invariant (empty ⇒ consistent)."""
+        errs: list[str] = []
+        claimed = sum(c.slices for c in self._claims.values())
+        counted = sum(self._claimed_per_alloc.values())
+        if claimed != counted:
+            errs.append(f"sum(claims)={claimed} != "
+                        f"sum(claimed_per_alloc)={counted}")
+        for aid, amt in self._claimed_per_alloc.items():
+            a = self._allocs.get(aid)
+            if a is None:
+                errs.append(f"claimed_per_alloc references dead alloc {aid}")
+            elif not 0 <= amt <= a.slices:
+                errs.append(f"alloc {aid}: claimed {amt} outside "
+                            f"[0, {a.slices}]")
+        for c in self._claims.values():
+            if sum(c.alloc_slices.values()) != c.slices:
+                errs.append(f"claim {c.id}: breakdown sums to "
+                            f"{sum(c.alloc_slices.values())}, "
+                            f"not {c.slices}")
+            for aid in c.alloc_slices:
+                if aid not in self._allocs:
+                    errs.append(f"claim {c.id} references dead alloc {aid}")
+        return errs

@@ -1,1 +1,10 @@
-"""repro.serve — KV/SSM state serving steps."""
+"""repro.serve — serving layers.
+
+* ``serve.asa`` / ``serve.loop`` — ASA-as-a-service: a jitted, batched
+  submit-lead-time decision step over a fixed-slot tenant table of
+  device-resident Algorithm-1 posteriors, wrapped in a stdlib
+  event-loop shell (request queue → padded batches → one jitted step).
+  See ``serve/README.md``.
+* ``serve.step`` — KV/SSM state model-serving steps (prefill/decode)
+  for the model zoo under ``repro.models``.
+"""

@@ -1,0 +1,361 @@
+"""Event-loop shell around the jitted ASA decision core.
+
+Architecture follows the AWS ParallelCluster daemon split the ROADMAP
+names (sqswatcher/nodewatcher: a thin event-queue-driven shell making
+scale decisions around a core): pure stdlib threading — producers
+``submit()`` requests into a ``queue.Queue``; the serve loop drains up
+to ``batch_size`` of them, pads the batch with
+``parallel.fleet.pad_batch``, dispatches ONE jitted
+``serve.asa.serve_step`` (vmap, or shard_map when ``n_shards`` is set),
+and resolves each request's ``concurrent.futures.Future`` with its
+:class:`Decision`.
+
+Host-side responsibilities (everything the jitted core must not know):
+
+* **tenant admission** — tenant ids map to fixed table slots; a new
+  tenant takes a free slot (fresh slots were initialised at table build;
+  reused slots are reset through ``serve.asa.reset_slot`` with a fresh
+  fold_in key).  A full table raises :class:`TableFullError` into the
+  request's future, never into the loop.
+* **observation dedup** — the decision core requires at most one
+  observation per slot per batch (the scatter must be well-defined).
+  The batcher defers a tenant's second same-batch observation — and
+  every later request of that tenant, preserving per-tenant order — to
+  the next batch.
+* **checkpoint cadence** — every ``checkpoint_every`` batches the server
+  snapshots ``{table, tenant_ids, admissions, dirty}`` through
+  ``runtime.checkpoint``
+  (``save_async``; the previous handle's ``result()`` is collected first
+  so a failed background save raises in the serve loop, not silently).
+  ``ASAServer.restore`` resumes a server whose posteriors — PRNG keys
+  included — are bitwise what the saved server held, so restarted
+  decisions are bit-identical (pinned by tests/test_serve.py).
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from collections import deque
+from concurrent.futures import Future
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro.core import asa as core_asa
+from repro.parallel import fleet as pfleet
+from repro.runtime import checkpoint
+from repro.serve import asa as serve_asa
+
+
+class TableFullError(RuntimeError):
+    """Every tenant slot is occupied; evict a tenant first."""
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    """Static server parameters (one compiled step per config)."""
+
+    n_slots: int = 1024        # fixed tenant-table capacity
+    m: int = 53                # wait-bin count (paper §4.3)
+    batch_size: int = 256      # queries per jitted step (the padded shape)
+    n_shards: Optional[int] = None  # shard_map the query axis over N devices
+    batch_wait_s: float = 0.002     # max idle wait for the first request
+    checkpoint_dir: Optional[str] = None
+    checkpoint_every: int = 0  # batches between async snapshots (0 = off)
+    seed: int = 0
+
+    def __post_init__(self) -> None:
+        if self.n_slots < 1:
+            raise ValueError(f"n_slots must be >= 1, got {self.n_slots}")
+        if self.batch_size < 1:
+            raise ValueError(
+                f"batch_size must be >= 1, got {self.batch_size}")
+        if self.n_shards is not None and \
+                self.batch_size % self.n_shards != 0:
+            raise ValueError(
+                f"batch_size {self.batch_size} not divisible by n_shards "
+                f"{self.n_shards}: the padded batch must split evenly "
+                "over the mesh")
+        if self.checkpoint_every and not self.checkpoint_dir:
+            raise ValueError("checkpoint_every set without checkpoint_dir")
+
+
+@dataclass
+class Request:
+    """One tenant query: an optional observed stage wait to learn from,
+    and (always) the submit-lead-time decision for the next stage."""
+
+    tenant: int
+    observed_wait: Optional[float] = None
+
+
+@dataclass
+class Decision:
+    """The answer: submit the next stage ``lead_s`` seconds before the
+    current stage's expected end (MAP wait); ``expected_s``/``entropy``
+    report the posterior mean and how much the estimator still hedges."""
+
+    tenant: int
+    lead_s: float
+    expected_s: float
+    entropy: float
+
+
+class ASAServer:
+    """Batched ASA decision service over a fixed-slot tenant table."""
+
+    def __init__(self, cfg: ServeConfig, mesh=None):
+        self.cfg = cfg
+        if mesh is None and cfg.n_shards is not None:
+            from repro.launch.mesh import make_scenarios_mesh
+            mesh = make_scenarios_mesh(cfg.n_shards)
+        self._mesh = mesh
+        self._table = serve_asa.init_table(cfg.n_slots, cfg.m, cfg.seed)
+        # host-side tenant bookkeeping: the (n_slots,) id array is part of
+        # the checkpointed state; the dict/free-list are derived views.
+        # int32 on purpose: the checkpoint codec restores through jnp,
+        # which is 32-bit without x64 — tenant ids must fit i32
+        self._tenant_ids = np.full(cfg.n_slots, -1, np.int32)
+        self._slot_of: dict[int, int] = {}
+        self._free: deque[int] = deque(range(cfg.n_slots))
+        self._dirty: set[int] = set()   # freed slots needing a reset
+        self._admissions = 0            # salts reset keys
+        self._queue: "queue.Queue[tuple[Request, Future]]" = queue.Queue()
+        self._deferred: deque[tuple[Request, Future]] = deque()
+        self._batches = 0
+        self._decisions = 0
+        self._ckpt_handle: Optional[checkpoint.AsyncSave] = None
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------ tenants
+    @property
+    def n_tenants(self) -> int:
+        return len(self._slot_of)
+
+    def _admit(self, tenant: int) -> int:
+        if not self._free:
+            raise TableFullError(
+                f"all {self.cfg.n_slots} tenant slots occupied")
+        slot = self._free.popleft()
+        if slot in self._dirty:
+            # slot reuse: back to the uniform prior with a fresh key
+            key = jax.random.fold_in(
+                jax.random.PRNGKey(self.cfg.seed ^ 0x5A5A5A5A),
+                self._admissions)
+            self._table = serve_asa.reset_slot(self._table, slot, key)
+            self._dirty.discard(slot)
+        self._admissions += 1
+        self._slot_of[tenant] = slot
+        self._tenant_ids[slot] = tenant
+        return slot
+
+    def evict(self, tenant: int) -> None:
+        """Free a tenant's slot (its posterior resets on slot reuse)."""
+        slot = self._slot_of.pop(tenant)
+        self._tenant_ids[slot] = -1
+        self._dirty.add(slot)
+        self._free.append(slot)
+
+    # ------------------------------------------------------------ serving
+    def submit(self, tenant: int,
+               observed_wait: Optional[float] = None) -> Future:
+        """Enqueue one request; the future resolves to a Decision."""
+        fut: Future = Future()
+        self._queue.put((Request(tenant, observed_wait), fut))
+        return fut
+
+    def _drain(self, wait_s: float) -> list[tuple[Request, Future]]:
+        """Pull queued requests into the deferred deque, then pick the
+        next batch in order, deferring any tenant whose second same-batch
+        observation would break the unique-scatter invariant."""
+        pending = self._deferred
+        timeout = wait_s if not pending else 0.0
+        while True:
+            try:
+                item = (self._queue.get(timeout=timeout)
+                        if timeout > 0 else self._queue.get_nowait())
+            except queue.Empty:
+                break
+            pending.append(item)
+            timeout = 0.0
+        batch: list[tuple[Request, Future]] = []
+        held: deque[tuple[Request, Future]] = deque()
+        obs_seen: set[int] = set()
+        blocked: set[int] = set()
+        while pending and len(batch) < self.cfg.batch_size:
+            req, fut = pending.popleft()
+            if req.tenant in blocked:
+                held.append((req, fut))
+                continue
+            if req.observed_wait is not None:
+                if req.tenant in obs_seen:
+                    # second observation for this slot: defer it (and all
+                    # later requests of this tenant — order preserved)
+                    blocked.add(req.tenant)
+                    held.append((req, fut))
+                    continue
+                obs_seen.add(req.tenant)
+            batch.append((req, fut))
+        held.extend(pending)
+        self._deferred = held
+        return batch
+
+    def step_once(self, wait_s: Optional[float] = None) -> int:
+        """Drain + dispatch one batch; returns the number of requests
+        answered (0 when the queue stayed empty)."""
+        batch = self._drain(self.cfg.batch_wait_s
+                            if wait_s is None else wait_s)
+        if not batch:
+            return 0
+        slots = np.zeros(len(batch), np.int32)
+        waits = np.zeros(len(batch), np.float32)
+        has = np.zeros(len(batch), bool)
+        live: list[tuple[int, Future, int]] = []  # (row, future, tenant)
+        for i, (req, fut) in enumerate(batch):
+            slot = self._slot_of.get(req.tenant)
+            if slot is None:
+                try:
+                    slot = self._admit(req.tenant)
+                except TableFullError as e:
+                    fut.set_exception(e)
+                    continue
+            slots[i] = slot
+            if req.observed_wait is not None:
+                waits[i] = req.observed_wait
+                has[i] = True
+            live.append((i, fut, req.tenant))
+        if not live:  # every request failed admission — nothing to serve
+            return 0
+        q = serve_asa.QueryBatch(
+            slot=jax.numpy.asarray(slots),
+            observed_wait=jax.numpy.asarray(waits),
+            has_obs=jax.numpy.asarray(has))
+        # pad to the one compiled (batch_size,) shape; the mask guards the
+        # pad rows (copies of query 0) from ever touching the table
+        qp, mask = pfleet.pad_batch(q, self.cfg.batch_size)
+        self._table, dec = serve_asa.serve_step(self._table, qp, mask,
+                                                mesh=self._mesh)
+        lead = np.asarray(dec.lead_s)
+        expected = np.asarray(dec.expected_s)
+        entropy = np.asarray(dec.entropy)
+        for i, fut, tenant in live:
+            fut.set_result(Decision(tenant, float(lead[i]),
+                                    float(expected[i]), float(entropy[i])))
+        self._batches += 1
+        self._decisions += len(live)
+        if (self.cfg.checkpoint_every
+                and self._batches % self.cfg.checkpoint_every == 0):
+            self.save_async()
+        return len(live)
+
+    def _run(self) -> None:
+        while not self._stop.is_set():
+            if self.step_once() == 0:
+                # queue stayed empty for batch_wait_s: yield briefly so a
+                # stopped server exits promptly (sqswatcher's idle poll)
+                self._stop.wait(self.cfg.batch_wait_s)
+
+    def start(self) -> None:
+        """Run the serve loop in a daemon thread."""
+        if self._thread is not None:
+            raise RuntimeError("server already started")
+        self._thread = threading.Thread(target=self._run, daemon=True,
+                                        name="asa-serve-loop")
+        self._thread.start()
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        self._stop.clear()
+        if self._ckpt_handle is not None:
+            self._ckpt_handle.result()
+            self._ckpt_handle = None
+
+    # --------------------------------------------------------- durability
+    def _state_tree(self) -> dict:
+        # the full durable state: posteriors AND the host bookkeeping
+        # that shapes future admissions (the dirty mask and the
+        # admissions counter that salts reset keys) — so a restored
+        # server admits new tenants with the exact keys the
+        # uninterrupted one would have used
+        dirty = np.zeros(self.cfg.n_slots, bool)
+        if self._dirty:
+            dirty[list(self._dirty)] = True
+        return {"table": self._table, "tenant_ids": self._tenant_ids,
+                "admissions": np.int32(self._admissions), "dirty": dirty}
+
+    def save(self, step: Optional[int] = None) -> Path:
+        """Synchronous snapshot through the checkpoint codec."""
+        assert self.cfg.checkpoint_dir, "ServeConfig.checkpoint_dir unset"
+        return checkpoint.save(self._state_tree(), self.cfg.checkpoint_dir,
+                               self._batches if step is None else step)
+
+    def save_async(self, step: Optional[int] = None) -> checkpoint.AsyncSave:
+        """Background snapshot; a previously-failed save raises HERE (the
+        handle's result() re-raises), so cadenced saves can't fail
+        silently batch after batch."""
+        assert self.cfg.checkpoint_dir, "ServeConfig.checkpoint_dir unset"
+        if self._ckpt_handle is not None:
+            self._ckpt_handle.result()
+        self._ckpt_handle = checkpoint.save_async(
+            self._state_tree(), self.cfg.checkpoint_dir,
+            self._batches if step is None else step)
+        return self._ckpt_handle
+
+    @classmethod
+    def restore(cls, cfg: ServeConfig, step: Optional[int] = None,
+                mesh=None) -> "ASAServer":
+        """Resume a server from its checkpoint: posteriors (PRNG keys
+        included) and the tenant map come back exactly, so the restarted
+        server's decisions are bitwise those of the uninterrupted one."""
+        assert cfg.checkpoint_dir, "ServeConfig.checkpoint_dir unset"
+        if step is None:
+            step = checkpoint.latest_step(cfg.checkpoint_dir)
+            if step is None:
+                raise FileNotFoundError(
+                    f"no checkpoint under {cfg.checkpoint_dir}")
+        server = cls(cfg, mesh=mesh)
+        tree = checkpoint.restore(server._state_tree(),
+                                  cfg.checkpoint_dir, step)
+        server._table = tree["table"]
+        # np.array (copy): asarray on a jax array yields a read-only view
+        server._tenant_ids = np.array(tree["tenant_ids"], np.int32)
+        server._slot_of = {int(t): s
+                           for s, t in enumerate(server._tenant_ids)
+                           if t >= 0}
+        occupied = set(server._slot_of.values())
+        server._free = deque(s for s in range(cfg.n_slots)
+                             if s not in occupied)
+        # the dirty mask and admissions salt come back exactly, so a
+        # post-restart admission resets (or not) with the very key the
+        # uninterrupted server would have used
+        dirty = np.asarray(tree["dirty"])
+        server._dirty = {s for s in range(cfg.n_slots) if dirty[s]}
+        server._admissions = int(tree["admissions"])
+        server._batches = step
+        return server
+
+    # -------------------------------------------------------------- stats
+    @property
+    def stats(self) -> dict:
+        return {
+            "batches": self._batches,
+            "decisions": self._decisions,
+            "tenants": self.n_tenants,
+            "n_slots": self.cfg.n_slots,
+            "deferred": len(self._deferred),
+        }
+
+
+def estimate_lead(state: core_asa.ASAState, bins) -> jax.Array:
+    """Convenience: the submit-lead-time a single estimator answers
+    (MAP wait — what ``DecisionBatch.lead_s`` reports per tenant)."""
+    return core_asa.map_wait(state, bins)

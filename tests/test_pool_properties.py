@@ -1,0 +1,166 @@
+"""ResourcePool accounting: exact release/revoke, expiry, and the pool
+invariant under random operation mixes.
+
+The invariant (``ResourcePool.check_invariants``):
+
+    sum(claim.slices over live claims) == sum(claimed_per_alloc)
+    0 <= claimed_per_alloc[a] <= alloc[a].slices
+    no claim or counter references a dead allocation
+
+The regression tests pin the two historical bugs this file exists for:
+``remove_allocation`` used to drop a spanning claim WITHOUT handing its
+slices back to the surviving allocations (capacity leaked until the
+pool was rebuilt), and ``release`` gave back a "proportional" guess in
+dict order instead of the exact per-allocation breakdown.  The property
+test drives random claim/release/revoke/expiry mixes against the
+invariant (strategies restricted to integers — the conftest fallback
+stub supports only integers/floats/booleans).
+"""
+
+import random
+
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.runtime.pool import ResourcePool
+
+
+def _assert_consistent(pool):
+    errs = pool.check_invariants()
+    assert errs == [], errs
+
+
+# ----------------------------------------------------------- regressions
+def test_revoking_spanning_claim_returns_surviving_capacity():
+    """Two spanning claims + one allocation removal: the survivors'
+    capacity must come back exactly (the historical leak: the dead
+    claim's slices stayed counted against the surviving allocation)."""
+    pool = ResourcePool()
+    a1 = pool.add_allocation(4)
+    a2 = pool.add_allocation(4)
+    c1 = pool.claim(6)               # a1:4 + a2:2
+    c2 = pool.claim(2)               # a2:2
+    assert c1 is not None and c2 is not None
+    assert pool.available() == 0
+    revoked = pool.remove_allocation(a1.id)
+    assert [c.id for c in revoked] == [c1.id]
+    _assert_consistent(pool)
+    # c1's 2 slices on a2 are free again; only c2's 2 remain claimed
+    assert pool.available() == 2
+    c3 = pool.claim(2)
+    assert c3 is not None, "capacity leaked after spanning-claim revoke"
+    assert pool.available() == 0
+    _assert_consistent(pool)
+
+
+def test_release_is_exact_not_proportional():
+    """Release hands back the recorded per-allocation breakdown; a
+    skewed spanning claim must restore every allocation exactly."""
+    pool = ResourcePool()
+    a1 = pool.add_allocation(5)
+    a2 = pool.add_allocation(1)
+    c = pool.claim(6)                # a1:5 + a2:1
+    assert c.alloc_slices == {a1.id: 5, a2.id: 1}
+    pool.release(c)
+    _assert_consistent(pool)
+    assert pool.available() == 6
+    assert pool._claimed_per_alloc[a1.id] == 0
+    assert pool._claimed_per_alloc[a2.id] == 0
+    # double release is a no-op, not a negative counter
+    pool.release(c)
+    _assert_consistent(pool)
+    assert pool.available() == 6
+
+
+def test_revoke_fires_callbacks_with_the_dead_claim():
+    pool = ResourcePool()
+    a = pool.add_allocation(3)
+    c = pool.claim(3)
+    seen = []
+    pool.on_revoke.append(lambda cl: seen.append(cl))
+    pool.remove_allocation(a.id)
+    assert seen == [c]
+    _assert_consistent(pool)
+    assert pool.available() == 0 and pool.claim(1) is None
+
+
+# ----------------------------------------------------------------- expiry
+def test_expired_allocation_lapses_and_revokes():
+    """expires_at is actually consulted: the sweep lapses the
+    allocation and revokes its claims through on_revoke."""
+    pool = ResourcePool()
+    pool.add_allocation(4, expires_at=10.0)
+    a2 = pool.add_allocation(4)
+    c = pool.claim(6, now=0.0)       # spans both
+    assert c is not None
+    revoked = []
+    pool.on_revoke.append(lambda cl: revoked.append(cl.id))
+    assert pool.available(now=5.0) == 2          # not yet expired
+    assert revoked == []
+    lapsed = pool.sweep_expired(11.0)
+    assert [cl.id for cl in lapsed] == [c.id]
+    assert revoked == [c.id]
+    _assert_consistent(pool)
+    # the surviving allocation is whole again
+    assert pool.available() == a2.slices == 4
+
+
+def test_expired_inventory_is_never_claimable():
+    pool = ResourcePool()
+    pool.add_allocation(8, expires_at=100.0)
+    assert pool.claim(4, now=99.0) is not None
+    assert pool.claim(4, now=100.0) is None      # deadline inclusive
+    _assert_consistent(pool)
+    assert pool.available(now=100.0) == 0
+
+
+def test_claim_at_now_skips_expired_but_uses_live():
+    pool = ResourcePool()
+    pool.add_allocation(4, expires_at=10.0)
+    live = pool.add_allocation(4, expires_at=1000.0)
+    c = pool.claim(4, now=50.0)
+    assert c is not None and c.alloc_slices == {live.id: 4}
+    _assert_consistent(pool)
+
+
+# --------------------------------------------------------------- property
+@settings(max_examples=60, deadline=None)
+@given(st.integers(min_value=0, max_value=10**9))
+def test_pool_invariant_under_random_op_mix(seed):
+    """Random claim/release/revoke/expiry mixes never break the
+    invariant, never leave negative free capacity, and never let a
+    claimable request exceed what live healthy allocations hold."""
+    rng = random.Random(seed)
+    pool = ResourcePool()
+    claims = []
+    allocs = []
+    now = 0.0
+    for _ in range(60):
+        now += rng.random() * 5.0
+        op = rng.randrange(6)
+        if op == 0 or not allocs:
+            exp = now + rng.random() * 20.0 if rng.random() < 0.5 else None
+            allocs.append(pool.add_allocation(rng.randint(1, 8),
+                                              expires_at=exp))
+        elif op == 1:
+            c = pool.claim(rng.randint(1, 12), now=now)
+            if c is not None:
+                claims.append(c)
+        elif op == 2 and claims:
+            pool.release(claims.pop(rng.randrange(len(claims))))
+        elif op == 3:
+            dead = allocs.pop(rng.randrange(len(allocs)))
+            pool.remove_allocation(dead.id)
+        elif op == 4:
+            pool.sweep_expired(now)
+        else:
+            assert pool.available(now=now) >= 0
+        _assert_consistent(pool)
+        live = sum(pool._claimed_per_alloc.values())
+        total = sum(a.slices for a in pool._allocs.values())
+        assert 0 <= live <= total
+    # drain everything: releasing every live claim frees all capacity
+    for c in list(pool._claims.values()):
+        pool.release(c)
+    _assert_consistent(pool)
+    assert sum(pool._claimed_per_alloc.values()) == 0

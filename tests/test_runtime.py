@@ -57,6 +57,10 @@ def test_pool_claim_release_revoke():
     pool.on_revoke.append(lambda cl: revoked.append(cl.id))
     pool.remove_allocation(a1.id)
     assert revoked == [c.id]
+    # the revoked spanning claim hands its slices back to the surviving
+    # allocation — full capacity, not a leak (see test_pool_properties)
+    assert pool.available() == 4
+    assert pool.check_invariants() == []
     assert pool.claim(100) is None
 
 
