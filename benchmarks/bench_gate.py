@@ -12,12 +12,19 @@ tolerance) — the two fields are reciprocal, so both checks trip at the
 same throughput).
 
 ``serve_latency*.json`` legs (benchmarks/serve_latency.py) are gated the
-same way against ``benchmarks/baselines/serve_latency.json``:
-``decisions_per_sec`` may not drop more than the tolerance below its
-baseline, and the ``p99_ms`` decision latency may not exceed its ceiling
-(baseline ÷ (1 − tolerance)). Unlike the reciprocal throughput pair,
-rate and tail latency CAN regress independently (a stall lengthens the
-tail without moving the mean rate much), so both serve gates add signal.
+same way against ``benchmarks/baselines/serve_latency.json``, keyed by
+load mode: the open-loop leg (``serve``) gates ``decisions_per_sec``
+(floor baseline × (1 − tolerance)) — the sustained rate under a
+saturating backlog; the closed-loop leg (``serve-closed``) gates the
+``p50_ms``/``p99_ms`` *service-time* percentiles (ceilings baseline ÷
+(1 − tolerance)) measured at fixed in-flight concurrency. Unlike the
+reciprocal throughput pair, rate and tail latency CAN regress
+independently (a stall lengthens the tail without moving the mean rate
+much), so both serve gates add signal. Batching health is gated too:
+``pad_fraction``/``defer_rate`` must stay under the **absolute**
+ceilings (``*_max``) the baseline carries. The serving bench must also
+upload its ``serve_metrics`` registry-snapshot record
+(``--metrics-json``) — a missing serve_metrics leg fails the gate.
 Pass ``--no-serve`` to skip serve gating when replaying old
 throughput-only artifact sets.
 
@@ -121,11 +128,14 @@ def collect_legs(bench_dir: Path) -> tuple[dict[str, dict], list[str]]:
 
 
 def serve_leg_key(leg: dict) -> str:
-    """Stable merge key for serving legs: shard count only (the smoke
-    and full replays share one compiled shape; the label disambiguates
-    in the merged artifact, not in the gate)."""
+    """Stable merge key for serving legs: the load mode (open-loop legs
+    stay keyed ``serve`` for baseline continuity; closed-loop legs get
+    ``serve-closed``) plus the shard count.  The smoke and full replays
+    of one mode share a key on purpose — one compiled shape, one gate;
+    the label disambiguates in the merged artifact, not in the gate."""
     shards = int(leg.get("n_shards", 1) or 1)
-    return "serve" if shards == 1 else f"serve-shards{shards}"
+    key = "serve" if leg.get("mode", "open") == "open" else "serve-closed"
+    return key if shards == 1 else f"{key}-shards{shards}"
 
 
 def collect_serve_legs(bench_dir: Path) -> tuple[dict[str, dict],
@@ -155,13 +165,47 @@ def collect_serve_legs(bench_dir: Path) -> tuple[dict[str, dict],
     return legs, failures
 
 
+def collect_serve_metrics_legs(bench_dir: Path) -> tuple[dict[str, dict],
+                                                         list[str]]:
+    """(legs, failures) for serve_metrics*.json — the serving loop's
+    registry snapshot the bench emits via ``--metrics-json``.  Keyed by
+    shard count; schema violations are named failures."""
+    legs: dict[str, dict] = {}
+    failures: list[str] = []
+    for path in sorted(bench_dir.rglob("serve_metrics*.json")):
+        try:
+            rec = json.loads(path.read_text())
+        except (OSError, json.JSONDecodeError) as e:
+            failures.append(f"serve_metrics file {path} is unreadable: "
+                            f"{e}")
+            continue
+        try:
+            leg = telemetry.serve_metrics_leg(rec)
+        except ValueError as e:
+            run = rec.get("run", {}) if isinstance(rec, dict) else {}
+            label = run.get("label") or path.name
+            failures.append(f"serve_metrics leg ({label}, {path}) failed "
+                            f"telemetry validation: {e}")
+            continue
+        shards = int(leg.get("n_shards", 1) or 1)
+        key = "serve-metrics" if shards == 1 \
+            else f"serve-metrics-shards{shards}"
+        legs[key] = leg
+    return legs, failures
+
+
 def gate_serve(legs: dict[str, dict], baseline: dict,
                tolerance: float) -> tuple[dict, list[str]]:
     """Serve-side gate: for every baseline leg, ``decisions_per_sec``
-    must hold the floor baseline × (1 − tolerance) and ``p99_ms`` must
-    stay under the ceiling baseline ÷ (1 − tolerance). Missing gated
-    legs and baseline-gated metrics missing from a record are failures,
-    exactly as in :func:`gate`."""
+    must hold the floor baseline × (1 − tolerance), latency percentiles
+    (``p50_ms``/``p99_ms``) must stay under their ceilings baseline ÷
+    (1 − tolerance), and the batching-health rates must stay under the
+    **absolute** ceilings ``pad_fraction_max``/``defer_rate_max`` when
+    the baseline carries them (absolute on purpose: a pad fraction is
+    already a ratio, and closed-loop legs sit at a structural level set
+    by concurrency/batch_size — ratio-scaling a ratio gates nothing).
+    Missing gated legs and baseline-gated metrics missing from a record
+    are failures, exactly as in :func:`gate`."""
     failures: list[str] = []
     checks: dict[str, dict] = {}
     for key, base in baseline["legs"].items():
@@ -184,23 +228,46 @@ def gate_serve(legs: dict[str, dict], baseline: dict,
                     f"{key}: {dps:.0f} decisions/sec is below the "
                     f"regression floor {floor:.0f} (baseline "
                     f"{base['decisions_per_sec']:.0f} − {tolerance:.0%})")
-        if "p99_ms" in base:
-            if "p99_ms" not in rec:
-                failures.append(f"{key}: record carries no p99_ms but "
+        for pct in ("p50_ms", "p99_ms"):
+            if pct not in base:
+                continue
+            if pct not in rec:
+                failures.append(f"{key}: record carries no {pct} but "
                                 f"the baseline gates it")
                 checks[key]["ok"] = False
                 continue
-            ceil = base["p99_ms"] / (1.0 - tolerance)
-            p99 = float(rec["p99_ms"])
-            ok = p99 <= ceil
-            checks[key].update(p99_ms=p99, p99_baseline=base["p99_ms"],
-                               p99_ceiling=ceil, p99_ok=ok)
+            ceil = base[pct] / (1.0 - tolerance)
+            val = float(rec[pct])
+            ok = val <= ceil
+            checks[key].update(**{pct: val, f"{pct}_baseline": base[pct],
+                                  f"{pct}_ceiling": ceil,
+                                  f"{pct}_ok": ok})
             checks[key]["ok"] &= ok
             if not ok:
                 failures.append(
-                    f"{key}: p99 decision latency {p99:.0f} ms is above "
-                    f"the regression ceiling {ceil:.0f} (baseline "
-                    f"{base['p99_ms']:.0f} ÷ (1 − {tolerance:.0%}))")
+                    f"{key}: {pct[:3]} decision latency {val:.0f} ms is "
+                    f"above the regression ceiling {ceil:.0f} (baseline "
+                    f"{base[pct]:.0f} ÷ (1 − {tolerance:.0%}))")
+        for rate, cap_key in (("pad_fraction", "pad_fraction_max"),
+                              ("defer_rate", "defer_rate_max")):
+            if cap_key not in base:
+                continue
+            if rate not in rec:
+                failures.append(f"{key}: record carries no {rate} but "
+                                f"the baseline gates it")
+                checks[key]["ok"] = False
+                continue
+            cap = float(base[cap_key])
+            val = float(rec[rate])
+            ok = val <= cap
+            checks[key].update(**{rate: val, cap_key: cap,
+                                  f"{rate}_ok": ok})
+            checks[key]["ok"] &= ok
+            if not ok:
+                failures.append(
+                    f"{key}: {rate} {val:.3f} is above the absolute "
+                    f"ceiling {cap:.3f} — the batcher is padding or "
+                    f"deferring more than the committed baseline allows")
     return {"tolerance": tolerance, "checks": checks,
             "ok": not failures}, failures
 
@@ -299,21 +366,33 @@ def main() -> int:
     failures = schema_failures + failures
 
     serve_legs: dict[str, dict] = {}
+    serve_metrics_legs: dict[str, dict] = {}
     serve_baseline = None
     serve_gate_rec = None
     if not args.no_serve:
         serve_baseline = json.loads(args.serve_baseline.read_text())
         serve_legs, serve_schema_failures = collect_serve_legs(
             args.bench_dir)
+        serve_metrics_legs, metrics_failures = \
+            collect_serve_metrics_legs(args.bench_dir)
+        if not serve_metrics_legs:
+            # the registry snapshot is part of the gated contract: a
+            # serve-bench run that stops uploading it must not pass
+            metrics_failures.append(
+                "no serve_metrics*.json in the artifact set: the "
+                "serving bench must upload its registry-snapshot record "
+                "(serve_latency.py --metrics-json)")
         serve_gate_rec, serve_failures = gate_serve(
             serve_legs, serve_baseline, args.tolerance)
-        failures += serve_schema_failures + serve_failures
-        serve_gate_rec["ok"] = not (serve_schema_failures
-                                    + serve_failures)
+        serve_failures = serve_schema_failures + metrics_failures \
+            + serve_failures
+        failures += serve_failures
+        serve_gate_rec["ok"] = not serve_failures
     gate_rec["ok"] = not failures
 
     merged = {"legs": legs, "baseline": baseline, "gate": gate_rec,
               "serve_legs": serve_legs,
+              "serve_metrics_legs": serve_metrics_legs,
               "serve_baseline": serve_baseline,
               "serve_gate": serve_gate_rec}
     args.out.parent.mkdir(parents=True, exist_ok=True)
@@ -352,10 +431,25 @@ def main() -> int:
               f"{rec.get('decisions_per_sec', 0):.0f} decisions/sec, "
               f"p50 {rec.get('p50_ms', 0):.1f} ms / "
               f"p99 {rec.get('p99_ms', 0):.1f} ms "
-              f"(tenants={rec.get('n_tenants')}, "
+              f"(mode={rec.get('mode', 'open')}, "
+              f"tenants={rec.get('n_tenants')}, "
               f"batch={rec.get('batch_size')}, "
               f"shards={rec.get('n_shards', 1)}, "
               f"backend={rec.get('backend')})")
+        if "pad_fraction" in rec or "defer_rate" in rec:
+            print(f"bench_gate/{key}/batching: "
+                  f"pad_fraction {rec.get('pad_fraction', 0):.3f}, "
+                  f"defer_rate {rec.get('defer_rate', 0):.3f}")
+    for key in sorted(serve_metrics_legs):
+        rec = serve_metrics_legs[key]
+        print(f"bench_gate/{key}: "
+              f"obs overhead {rec.get('serve_obs_overhead_frac', 0):+.1%}"
+              f" decisions/sec, pad_fraction "
+              f"{rec.get('pad_fraction', 0):.3f}, defer_rate "
+              f"{rec.get('defer_rate', 0):.3f} "
+              f"(requests={rec.get('asa_serve_requests_total')}, "
+              f"deferrals={rec.get('asa_serve_deferrals_total')}, "
+              f"evictions={rec.get('asa_serve_evictions_total')})")
     if failures:
         for f in failures:
             print(f"bench_gate: FAIL {f}", file=sys.stderr)

@@ -113,6 +113,61 @@ def chrome_trace(final, labels: list[dict] | None = None) -> dict[str, Any]:
                           "n_scenarios": len(decoded)}}
 
 
+def merged_chrome_trace(final=None, labels: list[dict] | None = None,
+                        serve=None) -> dict[str, Any]:
+    """One Chrome trace interleaving the device event rings with the
+    serve-side request-lifecycle timeline.
+
+    ``final`` is a batched final ``ScenarioState`` carrying a trace (or
+    None for a serve-only file); ``serve`` is a
+    ``repro.obs.serve_obs.ServeObs``.  The serve rows land on the
+    reserved pids ``serve_obs.SERVE_PID``/``SERVE_REQUEST_PID`` —
+    asserted to sit above every scenario pid, so one file never
+    collides ids between the two sources.  Scenario rows tick in
+    *simulated* seconds, serve rows in *wall-clock* seconds since the
+    ``ServeObs`` epoch; the merged file interleaves the clocks as
+    separate process tracks, it does not align them.
+    """
+    from repro.obs import serve_obs as sobs
+
+    if final is None and serve is None:
+        raise ValueError("merged_chrome_trace needs a traced final "
+                         "state, a ServeObs, or both")
+    if final is not None:
+        out = chrome_trace(final, labels)
+    else:
+        out = {"traceEvents": [], "displayTimeUnit": "ms",
+               "otherData": {"format": "repro.obs.chrome_trace",
+                             "version": 1, "n_scenarios": 0}}
+    if serve is not None:
+        n = out["otherData"]["n_scenarios"]
+        if n >= sobs.SERVE_PID:
+            raise ValueError(
+                f"{n} scenario pids reach the reserved serve pid "
+                f"{sobs.SERVE_PID}; shrink the fleet or move SERVE_PID")
+        out["traceEvents"].extend(serve.chrome_events())
+        out["otherData"]["serve_pid"] = sobs.SERVE_PID
+        out["otherData"]["serve_request_pid"] = sobs.SERVE_REQUEST_PID
+    return out
+
+
+def write_merged_trace(path: str, final=None, labels=None,
+                       serve=None) -> dict[str, Any]:
+    """Export + write the merged trace; returns a small accounting dict
+    for the telemetry record (event counts per source + the path)."""
+    merged = merged_chrome_trace(final, labels, serve)
+    with open(path, "w") as f:
+        json.dump(merged, f)
+    meta: dict[str, Any] = {"path": path,
+                            "n_scenarios": merged["otherData"]
+                            ["n_scenarios"],
+                            "events_total": len(merged["traceEvents"])}
+    if serve is not None:
+        meta["serve_events_kept"] = len(serve.events)
+        meta["serve_events_dropped"] = serve.events_dropped
+    return meta
+
+
 def jsonl_events(final, labels: list[dict] | None = None) -> list[dict]:
     """Structured-log view: one dict per decoded event, all scenarios."""
     if final.trace is None:
@@ -233,7 +288,11 @@ def validate_file(path: str) -> list[str]:
     except (OSError, json.JSONDecodeError) as e:
         return [f"{path}: unreadable ({e})"]
     if telemetry.is_telemetry(obj):
-        errs = telemetry.validate(obj)
+        msgs = telemetry.validate(obj)
+        for w in msgs:
+            if telemetry.is_warning(w):
+                print(f"{path}: {w}")
+        errs = telemetry.hard_errors(msgs)
     elif isinstance(obj, dict) and "traceEvents" in obj:
         errs = validate_chrome(obj)
     else:

@@ -43,6 +43,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental.shard_map import shard_map
 
 from repro.core import asa
@@ -179,6 +180,22 @@ def _sharded_update_fn(mesh):
     fn = shard_map(block, mesh=mesh, in_specs=(rep, spec, spec),
                    out_specs=rep, check_rep=False)
     return jax.jit(fn)
+
+
+def decisions_to_host(dec: DecisionBatch
+                      ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Bring a ``DecisionBatch`` to host in ONE device→host sync.
+
+    ``np.asarray`` per field costs three round-trips to the device
+    stream; ``jax.device_get`` on the whole tuple blocks once.  This is
+    also the serve loop's *scatter-read* instrumentation point: the call
+    blocks until the dispatched ``serve_step`` actually finishes, so the
+    time spent here is the host-blocked device wait
+    (``obs.serve_obs`` records it as the ``scatter_read`` span, distinct
+    from the async ``device_step`` dispatch)."""
+    lead, expected, entropy = jax.device_get(
+        (dec.lead_s, dec.expected_s, dec.entropy))
+    return np.asarray(lead), np.asarray(expected), np.asarray(entropy)
 
 
 def serve_step(table: asa.ASAState, q: QueryBatch, mask: jax.Array, *,

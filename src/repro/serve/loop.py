@@ -30,16 +30,32 @@ Host-side responsibilities (everything the jitted core must not know):
   ``ASAServer.restore`` resumes a server whose posteriors — PRNG keys
   included — are bitwise what the saved server held, so restarted
   decisions are bit-identical (pinned by tests/test_serve.py).
+* **observability** — every server carries a
+  :class:`repro.obs.serve_obs.ServeObs`: an always-on
+  ``obs.registry`` metric set (``stats`` is a view over it; the
+  Prometheus/JSON scrape endpoint below exposes it live) plus
+  request-lifecycle span recording that is **off by default**
+  (``ServeConfig.obs_spans``) — with spans off no timestamps are taken
+  and the decision path is bit-identical to the uninstrumented server.
+  ``serve_metrics_http()`` serves ``GET /metrics`` (Prometheus text),
+  ``/metrics.json`` (registry snapshot) and ``/stats`` on a stdlib
+  ``ThreadingHTTPServer`` — no new dependencies.
+
+The registry is deliberately **not** part of the checkpoint: counters
+describe this process's lifetime, not the estimator state; a restored
+server starts its counters at zero while answering bitwise-identically.
 """
 
 from __future__ import annotations
 
+import json
 import queue
 import threading
 import time
 from collections import deque
 from concurrent.futures import Future
 from dataclasses import dataclass
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from pathlib import Path
 from typing import Optional
 
@@ -47,6 +63,7 @@ import jax
 import numpy as np
 
 from repro.core import asa as core_asa
+from repro.obs.serve_obs import ServeObs
 from repro.parallel import fleet as pfleet
 from repro.runtime import checkpoint
 from repro.serve import asa as serve_asa
@@ -68,6 +85,8 @@ class ServeConfig:
     checkpoint_dir: Optional[str] = None
     checkpoint_every: int = 0  # batches between async snapshots (0 = off)
     seed: int = 0
+    obs_spans: bool = False    # record request-lifecycle spans (wall-clock)
+    metrics_port: Optional[int] = None  # start() scrapes here (0 = any)
 
     def __post_init__(self) -> None:
         if self.n_slots < 1:
@@ -88,10 +107,15 @@ class ServeConfig:
 @dataclass
 class Request:
     """One tenant query: an optional observed stage wait to learn from,
-    and (always) the submit-lead-time decision for the next stage."""
+    and (always) the submit-lead-time decision for the next stage.
+
+    ``rid``/``t_enqueue`` are observability bookkeeping stamped by
+    ``submit()`` when span recording is on (-1/0.0 otherwise)."""
 
     tenant: int
     observed_wait: Optional[float] = None
+    rid: int = -1
+    t_enqueue: float = 0.0
 
 
 @dataclass
@@ -109,12 +133,15 @@ class Decision:
 class ASAServer:
     """Batched ASA decision service over a fixed-slot tenant table."""
 
-    def __init__(self, cfg: ServeConfig, mesh=None):
+    def __init__(self, cfg: ServeConfig, mesh=None,
+                 obs: Optional[ServeObs] = None):
         self.cfg = cfg
         if mesh is None and cfg.n_shards is not None:
             from repro.launch.mesh import make_scenarios_mesh
             mesh = make_scenarios_mesh(cfg.n_shards)
         self._mesh = mesh
+        self._obs = obs if obs is not None else \
+            ServeObs(spans=cfg.obs_spans)
         self._table = serve_asa.init_table(cfg.n_slots, cfg.m, cfg.seed)
         # host-side tenant bookkeeping: the (n_slots,) id array is part of
         # the checkpointed state; the dict/free-list are derived views.
@@ -125,13 +152,21 @@ class ASAServer:
         self._free: deque[int] = deque(range(cfg.n_slots))
         self._dirty: set[int] = set()   # freed slots needing a reset
         self._admissions = 0            # salts reset keys
+        self._requests_of: dict[int, int] = {}  # per-tenant lifetime count
         self._queue: "queue.Queue[tuple[Request, Future]]" = queue.Queue()
         self._deferred: deque[tuple[Request, Future]] = deque()
         self._batches = 0
-        self._decisions = 0
         self._ckpt_handle: Optional[checkpoint.AsyncSave] = None
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
+        self._http: Optional[ThreadingHTTPServer] = None
+        self._http_thread: Optional[threading.Thread] = None
+        self._obs.g_free_slots.set(len(self._free))
+
+    @property
+    def obs(self) -> ServeObs:
+        """The server's registry + span recorder (always present)."""
+        return self._obs
 
     # ------------------------------------------------------------ tenants
     @property
@@ -153,21 +188,49 @@ class ASAServer:
         self._admissions += 1
         self._slot_of[tenant] = slot
         self._tenant_ids[slot] = tenant
+        o = self._obs
+        o.c_admissions.inc()
+        o.g_tenants.set(len(self._slot_of))
+        o.g_free_slots.set(len(self._free))
+        o.instant("admit", o.now(), {"tenant": tenant, "slot": slot})
         return slot
 
     def evict(self, tenant: int) -> None:
-        """Free a tenant's slot (its posterior resets on slot reuse)."""
+        """Free a tenant's slot (its posterior resets on slot reuse).
+
+        The tenant's lifetime request total is snapshotted into the
+        registry (``asa_serve_evicted_requests_total``) at this moment,
+        so fleet accounting survives the eviction — ``stats`` no longer
+        silently loses an evicted tenant's counts."""
         slot = self._slot_of.pop(tenant)
         self._tenant_ids[slot] = -1
         self._dirty.add(slot)
         self._free.append(slot)
+        lifetime = self._requests_of.pop(tenant, 0)
+        o = self._obs
+        o.c_evictions.inc()
+        o.c_evicted_requests.inc(lifetime)
+        o.g_tenants.set(len(self._slot_of))
+        o.g_free_slots.set(len(self._free))
+        o.instant("evict", o.now(),
+                  {"tenant": tenant, "slot": slot, "requests": lifetime})
 
     # ------------------------------------------------------------ serving
     def submit(self, tenant: int,
                observed_wait: Optional[float] = None) -> Future:
         """Enqueue one request; the future resolves to a Decision."""
         fut: Future = Future()
-        self._queue.put((Request(tenant, observed_wait), fut))
+        req = Request(tenant, observed_wait)
+        o = self._obs
+        o.c_requests.inc()
+        o.g_inflight.inc()
+        if observed_wait is not None:
+            o.c_observations.inc()
+        if o.spans:
+            req.rid = o.next_rid()
+            req.t_enqueue = time.perf_counter()
+            o.enqueue(req.rid, tenant, req.t_enqueue)
+        self._queue.put((req, fut))
         return fut
 
     def _drain(self, wait_s: float) -> list[tuple[Request, Future]]:
@@ -188,9 +251,13 @@ class ASAServer:
         held: deque[tuple[Request, Future]] = deque()
         obs_seen: set[int] = set()
         blocked: set[int] = set()
+        o = self._obs
+        t_d = o.now()  # one defer timestamp per drain: deferral events
+        #                are batch-granular, a clock read each is not free
         while pending and len(batch) < self.cfg.batch_size:
             req, fut = pending.popleft()
             if req.tenant in blocked:
+                o.defer(req.rid, req.tenant, t_d)
                 held.append((req, fut))
                 continue
             if req.observed_wait is not None:
@@ -198,17 +265,21 @@ class ASAServer:
                     # second observation for this slot: defer it (and all
                     # later requests of this tenant — order preserved)
                     blocked.add(req.tenant)
+                    o.defer(req.rid, req.tenant, t_d)
                     held.append((req, fut))
                     continue
                 obs_seen.add(req.tenant)
             batch.append((req, fut))
         held.extend(pending)
         self._deferred = held
+        o.g_deferred.set(len(held))
         return batch
 
     def step_once(self, wait_s: Optional[float] = None) -> int:
         """Drain + dispatch one batch; returns the number of requests
         answered (0 when the queue stayed empty)."""
+        o = self._obs
+        t0 = o.now()
         batch = self._drain(self.cfg.batch_wait_s
                             if wait_s is None else wait_s)
         if not batch:
@@ -216,7 +287,7 @@ class ASAServer:
         slots = np.zeros(len(batch), np.int32)
         waits = np.zeros(len(batch), np.float32)
         has = np.zeros(len(batch), bool)
-        live: list[tuple[int, Future, int]] = []  # (row, future, tenant)
+        live: list[tuple[int, Future, Request]] = []  # (row, future, req)
         for i, (req, fut) in enumerate(batch):
             slot = self._slot_of.get(req.tenant)
             if slot is None:
@@ -224,14 +295,22 @@ class ASAServer:
                     slot = self._admit(req.tenant)
                 except TableFullError as e:
                     fut.set_exception(e)
+                    o.c_table_full.inc()
+                    tf = o.now()
+                    o.instant("table_full", tf, {"tenant": req.tenant})
+                    o.resolve(req.rid, req.tenant, req.t_enqueue, tf,
+                              error="table_full")
                     continue
             slots[i] = slot
             if req.observed_wait is not None:
                 waits[i] = req.observed_wait
                 has[i] = True
-            live.append((i, fut, req.tenant))
+            self._requests_of[req.tenant] = \
+                self._requests_of.get(req.tenant, 0) + 1
+            live.append((i, fut, req))
         if not live:  # every request failed admission — nothing to serve
             return 0
+        t1 = o.now()
         q = serve_asa.QueryBatch(
             slot=jax.numpy.asarray(slots),
             observed_wait=jax.numpy.asarray(waits),
@@ -239,16 +318,44 @@ class ASAServer:
         # pad to the one compiled (batch_size,) shape; the mask guards the
         # pad rows (copies of query 0) from ever touching the table
         qp, mask = pfleet.pad_batch(q, self.cfg.batch_size)
+        t2 = o.now()
         self._table, dec = serve_asa.serve_step(self._table, qp, mask,
                                                 mesh=self._mesh)
-        lead = np.asarray(dec.lead_s)
-        expected = np.asarray(dec.expected_s)
-        entropy = np.asarray(dec.entropy)
-        for i, fut, tenant in live:
-            fut.set_result(Decision(tenant, float(lead[i]),
-                                    float(expected[i]), float(entropy[i])))
+        t3 = o.now()
+        # ONE host-blocked device read for the whole decision batch —
+        # the scatter-read leg of the request lifecycle
+        lead, expected, entropy = serve_asa.decisions_to_host(dec)
+        t4 = o.now()
+        # one resolve timestamp + one bulk resolve for the whole batch —
+        # the requests leave together, and per-request observability
+        # calls are measurable at full rate (the bench's overhead
+        # budget pays for them)
+        t_res = o.now()
+        for i, fut, req in live:
+            fut.set_result(Decision(req.tenant, float(lead[i]),
+                                    float(expected[i]),
+                                    float(entropy[i])))
+        o.resolve_many([req for _i, _f, req in live], t_res)
         self._batches += 1
-        self._decisions += len(live)
+        o.c_batches.inc()
+        o.c_decisions.inc(len(live))
+        o.c_padded.inc(self.cfg.batch_size - len(live))
+        if o.spans:
+            t5 = o.now()
+            fill = len(live) / self.cfg.batch_size
+            o.h_batch_fill.observe(fill)
+            o.h_device_step.observe(t3 - t2)
+            o.h_scatter_read.observe(t4 - t3)
+            o.span("batch_form", t0, t1, {
+                "batch": self._batches, "size": len(batch),
+                "live": len(live), "batch_size": self.cfg.batch_size,
+                "n_obs": int(has.sum()),
+                "pad_fraction": 1.0 - fill,
+                "deferred": len(self._deferred)})
+            o.span("pad", t1, t2)
+            o.span("device_step", t2, t3, {"async_dispatch": True})
+            o.span("scatter_read", t3, t4, {"host_blocked": True})
+            o.span("future_resolve", t4, t5, {"resolved": len(live)})
         if (self.cfg.checkpoint_every
                 and self._batches % self.cfg.checkpoint_every == 0):
             self.save_async()
@@ -262,9 +369,12 @@ class ASAServer:
                 self._stop.wait(self.cfg.batch_wait_s)
 
     def start(self) -> None:
-        """Run the serve loop in a daemon thread."""
+        """Run the serve loop in a daemon thread (plus the metrics
+        endpoint when ``ServeConfig.metrics_port`` is set)."""
         if self._thread is not None:
             raise RuntimeError("server already started")
+        if self.cfg.metrics_port is not None and self._http is None:
+            self.serve_metrics_http(self.cfg.metrics_port)
         self._thread = threading.Thread(target=self._run, daemon=True,
                                         name="asa-serve-loop")
         self._thread.start()
@@ -275,9 +385,68 @@ class ASAServer:
             self._thread.join()
             self._thread = None
         self._stop.clear()
+        self.stop_metrics_http()
         if self._ckpt_handle is not None:
             self._ckpt_handle.result()
             self._ckpt_handle = None
+
+    # ------------------------------------------------------ metrics scrape
+    def serve_metrics_http(self, port: int = 0,
+                           host: str = "127.0.0.1") -> int:
+        """Start the scrape endpoint on a stdlib ``ThreadingHTTPServer``
+        daemon thread; returns the bound port (pass ``port=0`` for an
+        ephemeral one).
+
+        * ``GET /metrics`` — Prometheus text exposition of the registry;
+        * ``GET /metrics.json`` — the registry snapshot as JSON;
+        * ``GET /stats`` — the ``stats`` view (backward-compatible keys).
+
+        Scrapes read live metric values metric-by-metric — a slow
+        scraper never blocks the serve loop.
+        """
+        if self._http is not None:
+            raise RuntimeError("metrics endpoint already running")
+        server = self
+
+        class Handler(BaseHTTPRequestHandler):
+            def do_GET(self) -> None:  # noqa: N802 (stdlib API name)
+                if self.path == "/metrics":
+                    body = server._obs.registry.prometheus_text().encode()
+                    ctype = "text/plain; version=0.0.4; charset=utf-8"
+                elif self.path == "/metrics.json":
+                    body = json.dumps(
+                        server._obs.registry.snapshot()).encode()
+                    ctype = "application/json"
+                elif self.path == "/stats":
+                    body = json.dumps(server.stats).encode()
+                    ctype = "application/json"
+                else:
+                    self.send_error(404)
+                    return
+                self.send_response(200)
+                self.send_header("Content-Type", ctype)
+                self.send_header("Content-Length", str(len(body)))
+                self.end_headers()
+                self.wfile.write(body)
+
+            def log_message(self, *args) -> None:  # quiet by design
+                pass
+
+        self._http = ThreadingHTTPServer((host, port), Handler)
+        self._http_thread = threading.Thread(
+            target=self._http.serve_forever, daemon=True,
+            name="asa-serve-metrics")
+        self._http_thread.start()
+        return self._http.server_address[1]
+
+    def stop_metrics_http(self) -> None:
+        if self._http is not None:
+            self._http.shutdown()
+            self._http.server_close()
+            self._http = None
+        if self._http_thread is not None:
+            self._http_thread.join()
+            self._http_thread = None
 
     # --------------------------------------------------------- durability
     def _state_tree(self) -> dict:
@@ -301,10 +470,20 @@ class ASAServer:
     def save_async(self, step: Optional[int] = None) -> checkpoint.AsyncSave:
         """Background snapshot; a previously-failed save raises HERE (the
         handle's result() re-raises), so cadenced saves can't fail
-        silently batch after batch."""
+        silently batch after batch.  The time blocked collecting the
+        previous handle is the checkpoint-cadence stall the observability
+        layer reports (counter + ``checkpoint_stall`` span)."""
         assert self.cfg.checkpoint_dir, "ServeConfig.checkpoint_dir unset"
+        o = self._obs
         if self._ckpt_handle is not None:
+            ts = time.perf_counter()
             self._ckpt_handle.result()
+            stall = time.perf_counter() - ts
+            o.c_ckpt_stall_s.inc(stall)
+            if o.spans:
+                o.span("checkpoint_stall", ts, ts + stall,
+                       {"batch": self._batches})
+        o.c_checkpoints.inc()
         self._ckpt_handle = checkpoint.save_async(
             self._state_tree(), self.cfg.checkpoint_dir,
             self._batches if step is None else step)
@@ -315,7 +494,9 @@ class ASAServer:
                 mesh=None) -> "ASAServer":
         """Resume a server from its checkpoint: posteriors (PRNG keys
         included) and the tenant map come back exactly, so the restarted
-        server's decisions are bitwise those of the uninterrupted one."""
+        server's decisions are bitwise those of the uninterrupted one.
+        Registry counters restart at zero — they describe the process,
+        not the estimator."""
         assert cfg.checkpoint_dir, "ServeConfig.checkpoint_dir unset"
         if step is None:
             step = checkpoint.latest_step(cfg.checkpoint_dir)
@@ -341,17 +522,32 @@ class ASAServer:
         server._dirty = {s for s in range(cfg.n_slots) if dirty[s]}
         server._admissions = int(tree["admissions"])
         server._batches = step
+        server._obs.g_tenants.set(len(server._slot_of))
+        server._obs.g_free_slots.set(len(server._free))
         return server
 
     # -------------------------------------------------------------- stats
     @property
     def stats(self) -> dict:
+        """Registry view: the PR-7 keys keep their exact meaning
+        (``batches`` counts this process's dispatched steps — a restored
+        server resumes at its checkpoint step as before); the new keys
+        surface the registry counters, including the lifetime request
+        totals of evicted tenants snapshotted at evict time."""
+        o = self._obs
         return {
             "batches": self._batches,
-            "decisions": self._decisions,
+            "decisions": int(o.c_decisions.value),
             "tenants": self.n_tenants,
             "n_slots": self.cfg.n_slots,
             "deferred": len(self._deferred),
+            "requests": int(o.c_requests.value),
+            "deferrals": int(o.c_deferrals.value),
+            "failed": int(o.c_failed.value),
+            "table_full": int(o.c_table_full.value),
+            "admissions_live": int(o.c_admissions.value),
+            "evicted_tenants": int(o.c_evictions.value),
+            "evicted_requests": int(o.c_evicted_requests.value),
         }
 
 
