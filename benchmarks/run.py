@@ -7,9 +7,11 @@ before jax init); this driver summarizes its JSON output if present.
 ``--engine event`` (default) drives the discrete-event QueueSim campaign;
 ``--engine xsim`` runs the same strategy comparison on the vectorized
 fleet engine (repro.xsim) — thousands of scenarios in one jitted program.
-``--policy`` (xsim only; validated up front against ENGINE_POLICIES)
-adds the §4.5 ASA-Naive variant or the trained repro.rl learned head to
-the sweep.
+``--policy`` (validated up front against ENGINE_POLICIES; see the
+``--help`` epilog for the valid combinations) adds the §4.5 ASA-Naive
+variant, the trained repro.rl learned head (both xsim-only) or the
+pilot-job policy (both engines) to the sweep. ``--family`` (xsim only)
+selects a robustness scenario family (``repro.xsim.families``).
 """
 
 from __future__ import annotations
@@ -57,7 +59,8 @@ def dryrun_summary() -> None:
 
 
 def xsim_main(n_seeds: int = 4, include_naive: bool = False,
-              include_rl: bool = False,
+              include_rl: bool = False, include_pilot: bool = False,
+              family: str = "clean",
               n_shards: int | None = None,
               trace_path: Path | None = None,
               json_path: Path | None = None) -> None:
@@ -68,6 +71,12 @@ def xsim_main(n_seeds: int = 4, include_naive: bool = False,
     variant pays for mispredictions. ``include_rl`` first trains the
     learned submission-policy head (the benchmarks.rl_train smoke recipe)
     and adds it to the sweep as policy id 4 (greedy actions).
+    ``include_pilot`` adds the pilot-job policy (id 5): one peak-cores
+    allocation queued once, stages cycled inside it.
+    ``family`` picks the robustness scenario family
+    (``repro.xsim.families``): "clean" (default, no capacity events),
+    "faulty" (node failure + recovery), "elastic" (graceful
+    drain/grow resizes) or "preempt" (preemptive shrinks).
     ``n_shards`` shard_maps the scenario axis over that many devices
     (validated against the inventory at the command line).
     ``trace_path`` runs the sweep with per-scenario event rings enabled
@@ -84,8 +93,9 @@ def xsim_main(n_seeds: int = 4, include_naive: bool = False,
     from repro.obs import metrics as obs_metrics
     from repro.obs import telemetry
     from repro.xsim import policies
-    from repro.xsim.grid import XSimConfig, make_grid, run_grid, warm_fleet
-    from repro.xsim.state import ASA, ASA_NAIVE, BIGJOB, PER_STAGE, RL
+    from repro.xsim.families import family_grid
+    from repro.xsim.grid import XSimConfig, run_grid, warm_fleet
+    from repro.xsim.state import ASA, ASA_NAIVE, BIGJOB, PER_STAGE, PILOT, RL
 
     cfg = XSimConfig(n_warm=24, n_backlog=16, n_arrivals=24, max_stages=9,
                      t0=3600.0)
@@ -96,6 +106,8 @@ def xsim_main(n_seeds: int = 4, include_naive: bool = False,
     policy_ids = (BIGJOB, PER_STAGE, ASA)
     if include_naive:
         policy_ids += (ASA_NAIVE,)
+    if include_pilot:
+        policy_ids += (PILOT,)
     params = None
     if include_rl:
         from benchmarks.rl_train import SMOKE
@@ -105,8 +117,8 @@ def xsim_main(n_seeds: int = 4, include_naive: bool = False,
         # training rollouts dominate the wall-clock — shard them too
         params = rl_train.train(rl_train.TrainConfig(
             **SMOKE, n_shards=n_shards)).params
-    grid = make_grid(cfg, n_seeds=n_seeds, shrink=1 / 64.0,
-                     policy_ids=policy_ids)
+    grid = family_grid(cfg, family, n_seeds=n_seeds, shrink=1 / 64.0,
+                       policy_ids=policy_ids)
     fleet = policies.init_fleet(int(grid.geo_idx.max()) + 1)
     fleet = warm_fleet(fleet, grid, rounds=3, params=params,
                        n_shards=n_shards)
@@ -127,8 +139,9 @@ def xsim_main(n_seeds: int = 4, include_naive: bool = False,
         mk = float(np.mean(m["makespan_s"][idx]))
         ch = float(np.mean(m["core_hours"][idx]))
         oh = float(np.mean(m["oh_hours"][idx]))
+        rs = float(np.mean(m["restarts"][idx]))
         rows[strat] = {"twt_s": tw, "makespan_s": mk, "core_hours": ch,
-                       "oh_hours": oh, "n": len(idx)}
+                       "oh_hours": oh, "restarts": rs, "n": len(idx)}
         print(f"xsim_strategies/{strat},{elapsed * 1e6 / grid.n:.0f},"
               f"twt=+{(tw / max(base['twt_s'], 1e-9) - 1) * 100:.0f}%;"
               f"makespan=+{(mk / base['makespan_s'] - 1) * 100:.0f}%;"
@@ -147,13 +160,14 @@ def xsim_main(n_seeds: int = 4, include_naive: bool = False,
               f"dropped={trace_sec['events_dropped']};"
               f"capacity={cfg.trace_capacity};wrote={trace_path}")
     if json_path is not None:
-        summary = obs_metrics.sweep_summary(final, n_steps=cfg.n_steps)
+        summary = obs_metrics.sweep_summary(final,
+                                            n_steps=grid.cfg.n_steps)
         rec = telemetry.record(
             "xsim_strategies",
             run={"label": "strategies", "n_shards": n_shards or 1,
                  "backend": jax.default_backend(),
-                 "n_scenarios": grid.n, "n_steps": cfg.n_steps,
-                 "policies": sorted(by),
+                 "n_scenarios": grid.n, "n_steps": grid.cfg.n_steps,
+                 "policies": sorted(by), "family": family,
                  "traced": trace_path is not None},
             profile={"sweep_s": elapsed,
                      "scenarios_per_sec": grid.n / elapsed,
@@ -166,7 +180,7 @@ def xsim_main(n_seeds: int = 4, include_naive: bool = False,
         json_path.write_text(json.dumps(rec, indent=2))
 
 
-def main() -> None:
+def main(include_pilot: bool = False) -> None:
     import time
     from collections import defaultdict
 
@@ -177,7 +191,7 @@ def main() -> None:
 
     # table1 + fig9 share one simulation campaign (54 runs + naive)
     t0 = time.time()
-    res = run_table1(seed=0, include_naive=True)
+    res = run_table1(seed=0, include_naive=True, include_pilot=include_pilot)
     elapsed = time.time() - t0
     summary = summarize_table1(res)
     n = len(res.runs)
@@ -201,12 +215,24 @@ def main() -> None:
 # extra policies each engine understands; validated up front so a bad
 # combination fails at the command line, not deep inside a jitted sweep
 ENGINE_POLICIES = {
-    "event": (),
-    "xsim": ("asa-naive", "rl"),
+    "event": ("pilot",),
+    "xsim": ("asa-naive", "rl", "pilot"),
 }
 
+
+def _policy_epilog() -> str:
+    """Human-readable list of the valid --engine/--policy combinations."""
+    lines = ["valid --engine / --policy combinations:"]
+    for eng, ps in ENGINE_POLICIES.items():
+        opts = ", ".join(f"--policy {p}" for p in ps) or "(no --policy)"
+        lines.append(f"  --engine {eng}: {opts}")
+    return "\n".join(lines)
+
+
 if __name__ == "__main__":
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(
+        epilog=_policy_epilog(),
+        formatter_class=argparse.RawDescriptionHelpFormatter)
     ap.add_argument("--engine", choices=tuple(ENGINE_POLICIES),
                     default="event")
     ap.add_argument("--policy",
@@ -216,7 +242,14 @@ if __name__ == "__main__":
                     help="asa-naive: include the §4.5 cancel/resubmit "
                          "variant in the xsim strategy sweep; rl: train "
                          "the repro.rl smoke recipe and include the "
-                         "learned head (both xsim-only)")
+                         "learned head (both xsim-only); pilot: include "
+                         "the pilot-job policy (one peak-cores "
+                         "allocation, stages cycled inside; both "
+                         "engines)")
+    ap.add_argument("--family", default="clean", metavar="NAME",
+                    help="xsim only: robustness scenario family "
+                         "(repro.xsim.families) — clean, faulty, "
+                         "elastic or preempt")
     ap.add_argument("--shards", type=int, default=None, metavar="N",
                     help="xsim only: shard_map the scenario axis over "
                          "the first N devices (default: single-device "
@@ -251,6 +284,14 @@ if __name__ == "__main__":
         err = shards_arg_error(args.shards)
         if err is not None:
             ap.error(err)
+    if args.family != "clean":
+        from repro.xsim.families import FAMILIES
+        if args.family not in FAMILIES:
+            ap.error(f"unknown --family {args.family} (choose from "
+                     f"{', '.join(FAMILIES)})")
+        if args.engine != "xsim":
+            ap.error(f"--family requires --engine xsim (the {args.engine} "
+                     "engine has no fault schedules)")
     # observability flags validate up front too, before any jit work
     if args.trace is not None and args.no_trace:
         ap.error("--trace and --no-trace are mutually exclusive")
@@ -261,7 +302,9 @@ if __name__ == "__main__":
     if args.engine == "xsim":
         xsim_main(include_naive=args.policy == "asa-naive",
                   include_rl=args.policy == "rl",
+                  include_pilot=args.policy == "pilot",
+                  family=args.family,
                   n_shards=args.shards,
                   trace_path=args.trace, json_path=args.json)
     else:
-        main()
+        main(include_pilot=args.policy == "pilot")

@@ -74,11 +74,13 @@ import numpy as np
 from repro.obs import telemetry
 from repro.serve.loop import ASAServer, ServeConfig
 from repro.xsim import policies
-from repro.xsim.grid import XSimConfig, make_grid, run_grid, stage_waits
+from repro.xsim.families import FAMILIES, family_grid
+from repro.xsim.grid import XSimConfig, run_grid, stage_waits
 from repro.xsim.state import ASA
 
 
-def build_traffic(n_seeds: int, seed: int = 0, trace: bool = False):
+def build_traffic(n_seeds: int, seed: int = 0, trace: bool = False,
+                  family: str = "clean"):
     """Simulate a fleet and turn it into a request stream.
 
     Returns ``(events, n_tenants, final, labels)`` where ``events`` is a
@@ -86,13 +88,17 @@ def build_traffic(n_seeds: int, seed: int = 0, trace: bool = False):
     simulated event time — the order a live fleet would have produced
     them — and ``final``/``labels`` are the swept state (device event
     rings included when ``trace=True``) for the merged Chrome export.
+    ``family`` picks the load generator's robustness scenario family
+    (``repro.xsim.families``) — a faulty/elastic fleet produces the
+    non-stationary wait mix a stressed center would stream at the
+    service.
     """
     cfg = XSimConfig(n_warm=16, n_backlog=12, n_arrivals=16, max_stages=9,
                      t0=3600.0)
     if trace:
         cfg = cfg.with_trace()
-    grid = make_grid(cfg, policy_ids=(ASA,), n_seeds=n_seeds,
-                     shrink=1 / 64.0, seed=seed)
+    grid = family_grid(cfg, family, policy_ids=(ASA,), n_seeds=n_seeds,
+                       shrink=1 / 64.0, seed=seed)
     fleet = policies.init_fleet(int(grid.geo_idx.max()) + 1)
     final, _ = run_grid(grid, fleet)
     waits, valid = stage_waits(final, cfg)
@@ -260,6 +266,10 @@ def main() -> int:
     ap.add_argument("--shards", type=int, default=None, metavar="N",
                     help="shard_map the query axis over the first N "
                          "devices (default: single-device vmap)")
+    ap.add_argument("--family", choices=FAMILIES, default="clean",
+                    help="load-generator robustness family "
+                         "(repro.xsim.families): clean (default), "
+                         "faulty, elastic or preempt")
     ap.add_argument("--closed-loop", type=int, default=64, metavar="K",
                     help="in-flight concurrency for the closed-loop leg "
                          "(0 disables the leg; default 64)")
@@ -305,7 +315,7 @@ def main() -> int:
 
     t0 = time.perf_counter()
     events, n_tenants, lg_final, lg_labels = build_traffic(
-        args.seeds, trace=args.trace is not None)
+        args.seeds, trace=args.trace is not None, family=args.family)
     loadgen_s = time.perf_counter() - t0
     n_obs = sum(1 for e in events if e[2] is not None)
     print(f"serve_latency/loadgen: {n_tenants} tenants, "
@@ -420,6 +430,7 @@ def main() -> int:
         "n_devices": len(jax.devices()),
         "backend": jax.default_backend(),
         "loadgen_seeds": args.seeds,
+        "loadgen_family": args.family,
         "restart_bitwise": ok_restart,
     }
     print(f"serve_latency/{label}: p50={prof['p50_ms']:.2f}ms "

@@ -34,7 +34,8 @@ from repro.obs import export as obs_export
 from repro.obs import metrics as obs_metrics
 from repro.obs import telemetry
 from repro.xsim import backfill, events, policies
-from repro.xsim.grid import XSimConfig, make_grid, run_grid
+from repro.xsim.families import FAMILIES, family_grid
+from repro.xsim.grid import XSimConfig, run_grid
 
 
 def profile_record(final, cfg: XSimConfig, compile_s: float,
@@ -89,10 +90,12 @@ def _timed_sweep(grid, fleet, reps: int, freed_mode: str,
 def bench(n_seeds: int, reps: int, label: str,
           freed_mode: str = "ref", n_shards: int | None = None,
           trace_path: Path | None = None,
-          trace_capacity: int | None = None) -> dict:
-    cfg = XSimConfig(n_warm=16, n_backlog=12, n_arrivals=16, max_stages=9,
-                     t0=3600.0)
-    grid = make_grid(cfg, n_seeds=n_seeds, shrink=1 / 64.0)
+          trace_capacity: int | None = None,
+          family: str = "clean") -> dict:
+    base_cfg = XSimConfig(n_warm=16, n_backlog=12, n_arrivals=16,
+                          max_stages=9, t0=3600.0)
+    grid = family_grid(base_cfg, family, n_seeds=n_seeds, shrink=1 / 64.0)
+    cfg = grid.cfg  # family patches n_faults (and hence n_steps)
     fleet = policies.init_fleet(int(grid.geo_idx.max()) + 1)
 
     final, m, compile_s, steady_s = _timed_sweep(grid, fleet, reps,
@@ -130,7 +133,7 @@ def bench(n_seeds: int, reps: int, label: str,
         # tracing costs a second timed pass: the gated numbers above stay
         # untraced, and the traced pass prices its own overhead
         tcfg = cfg.with_trace(trace_capacity)
-        tgrid = make_grid(tcfg, n_seeds=n_seeds, shrink=1 / 64.0)
+        tgrid = family_grid(tcfg, family, n_seeds=n_seeds, shrink=1 / 64.0)
         tfinal, _tm, tcompile_s, tsteady_s = _timed_sweep(
             tgrid, fleet, reps, freed_mode, n_shards)
         overhead = tsteady_s / steady_s - 1.0
@@ -160,6 +163,7 @@ def bench(n_seeds: int, reps: int, label: str,
             "n_steps": cfg.n_steps,
             "max_jobs": cfg.max_jobs,
             "reps": reps,
+            "family": family,
             "traced": trace_path is not None,
             "in_scan_learning": True,  # within-run ASA learning always on
         },
@@ -200,6 +204,10 @@ def main() -> None:
                          "devices (default: single-device vmap); fake N "
                          "CPU devices with XLA_FLAGS="
                          "--xla_force_host_platform_device_count=N")
+    ap.add_argument("--family", choices=FAMILIES, default="clean",
+                    help="robustness scenario family "
+                         "(repro.xsim.families): clean (default, no "
+                         "capacity events), faulty, elastic or preempt")
     ap.add_argument("--json", type=Path, default=None, metavar="PATH",
                     help="also write the telemetry record as JSON (the CI "
                          "bench-trajectory artifact)")
@@ -227,13 +235,15 @@ def main() -> None:
         rec = bench(n_seeds=2, reps=args.reps or 1, label="smoke",
                     freed_mode=mode, n_shards=args.shards,
                     trace_path=args.trace,
-                    trace_capacity=args.trace_capacity)
+                    trace_capacity=args.trace_capacity,
+                    family=args.family)
     else:
         # 54 cells × 19 seeds = 1026 scenarios in one batched program
         rec = bench(n_seeds=19, reps=args.reps or 2, label="sweep1k",
                     freed_mode=mode, n_shards=args.shards,
                     trace_path=args.trace,
-                    trace_capacity=args.trace_capacity)
+                    trace_capacity=args.trace_capacity,
+                    family=args.family)
     if args.json is not None:
         args.json.parent.mkdir(parents=True, exist_ok=True)
         args.json.write_text(json.dumps(rec, indent=2))

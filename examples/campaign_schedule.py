@@ -2,9 +2,11 @@
 training campaign on a batch-managed fleet (calibrated UPPMAX-like queue,
 ~15h waits).
 
-Compares three submission strategies for a 5-stage campaign
+Compares four submission strategies for a 5-stage campaign
 (data-prep -> pretrain -> anneal -> sft -> eval, different pod geometries):
   * big-job   : one allocation at peak width for the whole campaign,
+  * pilot     : one peak-width pilot allocation cycling the stages
+                internally (bootstrap + per-stage dispatch latency),
   * per-stage : request each stage's allocation when the previous ends,
   * ASA       : pro-active cascade (Algorithm 1 learns the queue).
 
@@ -14,7 +16,8 @@ Compares three submission strategies for a 5-stage campaign
 from repro.runtime.campaign import CampaignScheduler, CampaignStage
 from repro.sched.centers import UPPMAX
 from repro.sched.queue_sim import QueueSim
-from repro.sched.strategies import ASAEstimator
+from repro.sched.strategies import (ASAEstimator, PILOT_STARTUP_S,
+                                    PILOT_TASK_LATENCY_S)
 
 STAGES = [
     CampaignStage("data-prep", 160, 1800.0, arch="-"),
@@ -42,6 +45,16 @@ def main():
     big_makespan = job.end_time - job.submit_time
     big_slice_h = peak * exec_s / 3600.0
 
+    # --- pilot job: one queue wait like big-job, plus the pilot's own
+    # bootstrap + per-stage dispatch latency held at peak width
+    pilot_exec = (exec_s + PILOT_STARTUP_S
+                  + len(STAGES) * PILOT_TASK_LATENCY_S)
+    sim = fresh_sim()
+    job = sim.submit(peak, pilot_exec, user="pilot")
+    sim.run_until_job_ends(job)
+    pilot_makespan = job.end_time - job.submit_time
+    pilot_slice_h = peak * pilot_exec / 3600.0
+
     # --- per-stage: sequential requests
     sim = fresh_sim()
     t0 = sim.now
@@ -62,6 +75,8 @@ def main():
     print(f"{'strategy':10s} {'makespan_h':>10s} {'slice_h':>9s} "
           f"{'hidden_wait_h':>13s}")
     print(f"{'big-job':10s} {big_makespan/3600:10.2f} {big_slice_h:9.0f} "
+          f"{'—':>13s}")
+    print(f"{'pilot':10s} {pilot_makespan/3600:10.2f} {pilot_slice_h:9.0f} "
           f"{'—':>13s}")
     print(f"{'per-stage':10s} {ps_makespan/3600:10.2f} {opt_slice_h:9.0f} "
           f"{'—':>13s}")

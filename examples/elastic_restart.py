@@ -6,6 +6,10 @@
    onto whatever mesh exists now (elastic restart after node loss).
 4. Show the reshard plan a real resize would execute, and the straggler /
    heartbeat machinery that triggers it.
+5. Run the same story at fleet scale: a capacity-fault schedule
+   (runtime.fault / runtime.elastic) injected into a vectorized xsim
+   sweep — node failure mid-campaign, jobs requeued, restart overhead
+   charged, capacity recovered.
 
     PYTHONPATH=src python examples/elastic_restart.py
 """
@@ -62,6 +66,40 @@ def main():
     sm.start(99, 0.0)
     print(f"stragglers at t=30: {sm.stragglers(30.0)} "
           f"(re-issued, paper §4.8 re-submission logic)")
+
+    print("\n=== fleet-scale what-if: fault schedules in the xsim sweep ===")
+    import numpy as np
+    from repro.runtime.elastic import resize_schedule
+    from repro.xsim import XSimConfig, policies, run_grid
+    from repro.xsim.families import family_grid
+    from repro.xsim.grid import warm_fleet
+
+    # the host-side plan the reshard above would execute, as data:
+    # lose 30% of the fleet at t=2h (preempt -> kills + requeue), get
+    # it back at t=4h
+    plan = resize_schedule([(7200.0, -0.30), (14400.0, +0.30)],
+                           preempt=True)
+    t, c, k = plan.as_arrays(4, total_cores=480)
+    print(f"schedule rows (t, Δcores, kind): "
+          f"{[(float(a), float(b), int(d)) for a, b, d in zip(t, c, k)]}")
+
+    # the canonical families wire exactly such schedules into every
+    # scenario of a vectorized sweep
+    cfg = XSimConfig(n_warm=8, n_backlog=6, n_arrivals=8, max_stages=9,
+                     t0=1800.0)
+    for family in ("clean", "preempt"):
+        grid = family_grid(cfg, family, center_names=("hpc2n",),
+                           workflows=("statistics",), n_seeds=2,
+                           shrink=1 / 64.0, policy_ids=(0, 1, 2))
+        fleet = policies.init_fleet(int(grid.geo_idx.max()) + 1)
+        fleet = warm_fleet(fleet, grid, rounds=2)
+        final, m = run_grid(grid, fleet)
+        m = {key: np.asarray(v) for key, v in m.items()}
+        done = int(m["wf_done"].sum())
+        print(f"{family:7s} workflows done {done}/{int(m['wf_total'].sum())}"
+              f"  restarts/scenario {m['restarts'].mean():.2f}"
+              f"  restart_h {m['restart_hours'].mean():.3f}"
+              f"  mean twt_s {m['twt_s'].mean():.1f}")
 
 
 if __name__ == "__main__":

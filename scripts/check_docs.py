@@ -1,0 +1,148 @@
+#!/usr/bin/env python3
+"""Docs drift check: every CLI flag the docs mention must really exist.
+
+Pure stdlib (CI's gate tier runs it without jax). For every checked
+markdown file the script
+
+1. collects ``python -m <module>`` / ``python3 -m <module>`` invocations
+   and bare ``path/to/script.py`` mentions, mapping each to a repo file
+   (``benchmarks.run`` → ``benchmarks/run.py``, ``repro.obs.export`` →
+   ``src/repro/obs/export.py``); an invocation that maps to no file is
+   an error (a renamed or deleted entry point);
+2. parses each referenced module with ``ast`` — no imports, so modules
+   with heavyweight dependencies cost nothing — and collects every
+   string literal passed to an ``add_argument(...)`` call;
+3. extracts every ``--flag`` token from the markdown (ignoring
+   ``ENV=--flag`` forms like ``XLA_FLAGS=--xla_force...``) and requires
+   each to exist in the union of the file's referenced parsers.
+
+Reference/planning documents (ISSUE/PAPER/PAPERS/SNIPPETS/CHANGES/
+ROADMAP) are excluded: they quote external code and future work, not
+the current CLI surface. Exit status 0 = clean, 1 = drift (one line
+per offending ``file:line``).
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+# not user docs: planning / paper / exemplar material quotes flags and
+# invocations that are not (yet) part of this repo's CLI surface
+SKIP_NAMES = {"ISSUE.md", "PAPER.md", "PAPERS.md", "SNIPPETS.md",
+              "CHANGES.md", "ROADMAP.md"}
+SKIP_DIRS = {".git", ".claude", ".pytest_cache", "node_modules",
+             "__pycache__"}
+
+# stdlib / third-party -m targets that are not repo files
+EXTERNAL_MODULES = {"pytest", "pip", "venv", "http.server"}
+
+# flags argparse provides on every parser
+IMPLICIT_FLAGS = {"--help"}
+
+_INVOKE_RE = re.compile(r"python3?\s+-m\s+([A-Za-z_][\w.]*)")
+_PYFILE_RE = re.compile(r"(?<![\w/])((?:[\w.-]+/)*[\w.-]+\.py)\b")
+# a documented long flag; (?<![\w=-]) drops ENV=--flag forms and
+# mid-word dashes, \b won't cut "--freed-mode" short thanks to [\w-]*
+_FLAG_RE = re.compile(r"(?<![\w=\-])--[a-zA-Z][\w-]*")
+
+
+def module_to_path(module: str) -> Path | None:
+    """Map a ``-m`` target to the repo file that implements it."""
+    rel = Path(*module.split("."))
+    for cand in (REPO / rel.with_suffix(".py"),
+                 REPO / rel / "__main__.py",
+                 REPO / "src" / rel.with_suffix(".py"),
+                 REPO / "src" / rel / "__main__.py"):
+        if cand.is_file():
+            return cand
+    return None
+
+
+def parser_flags(py_path: Path) -> set[str]:
+    """All ``add_argument`` string literals in a module, via ast."""
+    tree = ast.parse(py_path.read_text(), filename=str(py_path))
+    flags: set[str] = set()
+    for node in ast.walk(tree):
+        if (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr == "add_argument"):
+            for arg in node.args:
+                if (isinstance(arg, ast.Constant)
+                        and isinstance(arg.value, str)
+                        and arg.value.startswith("--")):
+                    flags.add(arg.value)
+    return flags
+
+
+def referenced_modules(text: str) -> list[tuple[int, str, Path | None]]:
+    """(line, name, mapped path) for every module/script the doc cites."""
+    out = []
+    for i, line in enumerate(text.splitlines(), 1):
+        for m in _INVOKE_RE.finditer(line):
+            name = m.group(1)
+            if name in EXTERNAL_MODULES:
+                continue
+            out.append((i, name, module_to_path(name)))
+        for m in _PYFILE_RE.finditer(line):
+            p = REPO / m.group(1)
+            if p.is_file():
+                out.append((i, m.group(1), p))
+    return out
+
+
+def check_file(md: Path) -> list[str]:
+    text = md.read_text()
+    try:
+        rel = md.relative_to(REPO)
+    except ValueError:          # e.g. a tempfile in the negative test
+        rel = md.name
+    errors: list[str] = []
+
+    refs = referenced_modules(text)
+    for line, name, path in refs:
+        if path is None:
+            errors.append(f"{rel}:{line}: `{name}` is documented but no "
+                          "such module/script exists in the repo")
+    known = IMPLICIT_FLAGS.union(
+        *(parser_flags(p) for _, _, p in refs if p is not None))
+
+    for i, line in enumerate(text.splitlines(), 1):
+        for m in _FLAG_RE.finditer(line):
+            flag = m.group(0)
+            if flag in known:
+                continue
+            if not any(p is not None for _, _, p in refs):
+                continue  # doc cites no local CLI: nothing to check against
+            errors.append(
+                f"{rel}:{i}: documented flag `{flag}` not found in any "
+                "parser of the modules this doc references "
+                f"({', '.join(sorted({n for _, n, p in refs if p}))})")
+    return errors
+
+
+def find_docs(root: Path = REPO) -> list[Path]:
+    return sorted(
+        p for p in root.rglob("*.md")
+        if p.name not in SKIP_NAMES
+        and not (SKIP_DIRS & set(part.name for part in p.parents)))
+
+
+def main(paths: list[Path] | None = None) -> int:
+    docs = paths if paths is not None else find_docs()
+    errors: list[str] = []
+    for md in docs:
+        errors.extend(check_file(md))
+    for e in errors:
+        print(e, file=sys.stderr)
+    if not errors:
+        print(f"docs check: {len(docs)} file(s) clean")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main([Path(a).resolve() for a in sys.argv[1:]] or None))

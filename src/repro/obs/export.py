@@ -29,8 +29,8 @@ from typing import Any
 import numpy as np
 
 from repro.obs import trace as obtrace
-from repro.obs.trace import (EV_CANCEL, EV_FINISH, EV_RESUBMIT, EV_START,
-                             EV_SUBMIT, EVENT_NAMES)
+from repro.obs.trace import (EV_CANCEL, EV_FINISH, EV_KILL, EV_RESUBMIT,
+                             EV_START, EV_SUBMIT, EVENT_NAMES)
 
 _US = 1_000_000.0  # chrome ts unit: microseconds; sim time is seconds
 
@@ -63,9 +63,18 @@ def _scenario_events(events: dict[str, np.ndarray], meta: dict,
                         "cat": "run", "ts": t0 * _US,
                         "dur": max(t - t0, 0.0) * _US,
                         "args": {**args, "stage": st0, "cores": c0}})
-        elif kind in (EV_SUBMIT, EV_CANCEL, EV_RESUBMIT):
+        elif kind in (EV_SUBMIT, EV_CANCEL, EV_RESUBMIT, EV_KILL):
             if kind == EV_CANCEL:
                 open_start.pop(job, None)  # cancelled at its start instant
+            elif kind == EV_KILL and job in open_start:
+                # killed mid-run by a node failure: close the open
+                # allocation span at the kill instant (the lost attempt)
+                t0, st0, c0 = open_start.pop(job)
+                out.append({"ph": "X", "pid": pid, "tid": job,
+                            "name": f"run j{job} (killed)", "cat": "run",
+                            "ts": t0 * _US,
+                            "dur": max(t - t0, 0.0) * _US,
+                            "args": {**args, "stage": st0, "cores": c0}})
             out.append({"ph": "i", "pid": pid, "tid": job, "s": "t",
                         "name": EVENT_NAMES[kind], "cat": EVENT_NAMES[kind],
                         "ts": t * _US, "args": args})

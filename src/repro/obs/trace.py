@@ -52,6 +52,7 @@ EV_START = 2      # job started running (scheduling pass)
 EV_FINISH = 3     # running job completed
 EV_CANCEL = 4     # naive/RL early allocation cancelled at its start instant
 EV_RESUBMIT = 5   # cancelled successor released by predecessor completion
+EV_KILL = 6       # running job killed by a node failure, requeued in place
 
 EVENT_NAMES = {
     EV_SUBMIT: "submit",
@@ -59,6 +60,7 @@ EVENT_NAMES = {
     EV_FINISH: "finish",
     EV_CANCEL: "cancel",
     EV_RESUBMIT: "resubmit",
+    EV_KILL: "kill",
 }
 
 FIELDS = ("kind", "t", "job", "stage", "cores", "policy", "step")

@@ -14,16 +14,24 @@ and shardings are recomputed per mesh (parallel.sharding), a resize is:
 ``reshard_plan`` additionally reports, per parameter, old/new specs and the
 per-device bytes that must move — the number a scheduler needs to estimate
 resize cost (and what ASA learns to hide in the queue-wait overlap).
+
+``resize_schedule`` is the center-side view of the same elasticity: a
+sequence of live capacity changes (the malleable-job model of Dynamic
+Fractional Resource Scheduling, arXiv 1106.4985) expressed as a
+``runtime.fault.FaultSchedule`` that ``repro.xsim`` folds into its jitted
+scan — graceful shrinks drain, preemptive shrinks kill-and-requeue.
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import Sequence
 
 import jax
 import numpy as np
 
 from repro.parallel.sharding import ShardingRules
+from repro.runtime import fault as _fault
 
 
 @dataclass
@@ -64,3 +72,28 @@ def apply_resize(tree, new_mesh, new_rules: ShardingRules):
     shardings = new_rules.tree_shardings(tree)
     return jax.tree.map(
         lambda x, s: jax.device_put(x, s), tree, shardings)
+
+
+def resize_schedule(steps: Sequence[tuple[float, float]], *,
+                    preempt: bool = False) -> _fault.FaultSchedule:
+    """Live capacity plan → ``runtime.fault.FaultSchedule``.
+
+    ``steps`` is ``[(t, delta_frac), ...]``: at absolute simulation time
+    ``t`` the center's capacity changes by ``delta_frac`` of its original
+    total cores. Positive deltas grow (nodes join); negative deltas
+    shrink — gracefully by default (a DRAIN: nodes leave as their running
+    work completes), or preemptively with ``preempt=True`` (a FAIL: the
+    most recently started jobs on the lost nodes are killed and requeued,
+    the xsim engine charges their lost core-seconds as restart overhead).
+    """
+    events = []
+    for t, delta in steps:
+        if delta == 0.0:
+            raise ValueError(f"zero-delta resize step at t={t}")
+        if delta > 0.0:
+            events.append(_fault.grow(t, delta))
+        elif preempt:
+            events.append(_fault.fail(t, -delta))
+        else:
+            events.append(_fault.drain(t, -delta))
+    return _fault.FaultSchedule(tuple(events))

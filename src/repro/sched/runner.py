@@ -26,6 +26,7 @@ from repro.sched.strategies import (
     run_asa,
     run_bigjob,
     run_per_stage,
+    run_pilot,
 )
 from repro.sched.workflows import WORKFLOWS, Workflow
 
@@ -55,7 +56,8 @@ class Table1Result:
 
 def run_table1(seed: int = 0, include_naive: bool = True,
                workflows: tuple[str, ...] = ("montage", "blast", "statistics"),
-               n_warmup: int = 20) -> Table1Result:
+               n_warmup: int = 20,
+               include_pilot: bool = False) -> Table1Result:
     out = Table1Result()
     estimators: dict[tuple[str, int], ASAEstimator] = {}
     for center in CENTERS.values():
@@ -72,7 +74,8 @@ def run_table1(seed: int = 0, include_naive: bool = True,
                 wsim.run_until_job_starts(j)
                 est.learn(j.wait_time)
             for strategy in ("bigjob", "per_stage", "asa") + (
-                    ("asa_naive",) if include_naive else ()):
+                    ("asa_naive",) if include_naive else ()) + (
+                    ("pilot",) if include_pilot else ()):
                 # identical background (same seed) for a fair comparison
                 sim = _fresh_sim(center, seed)
                 for wf_name in workflows:
@@ -81,6 +84,8 @@ def run_table1(seed: int = 0, include_naive: bool = True,
                         m = run_bigjob(sim, wf, scale, center.name)
                     elif strategy == "per_stage":
                         m = run_per_stage(sim, wf, scale, center.name)
+                    elif strategy == "pilot":
+                        m = run_pilot(sim, wf, scale, center.name)
                     elif strategy == "asa":
                         m = run_asa(sim, wf, scale, center.name, est,
                                     use_dependencies=True)

@@ -14,8 +14,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.xsim.state import (ASA, ASA_NAIVE, DONE, QUEUED, RL, RUNNING,
-                              ScenarioState, empty_table)
+from repro.xsim.state import (ASA, ASA_NAIVE, DONE, PILOT, QUEUED, RL,
+                              RUNNING, ScenarioState, empty_table)
 
 
 def metrics(s: ScenarioState) -> dict[str, jax.Array]:
@@ -27,7 +27,16 @@ def metrics(s: ScenarioState) -> dict[str, jax.Array]:
     each stage's wait not hidden behind its predecessor's logical end,
     which includes any naive idle hold) — matching
     ``sched.strategies.run_asa``'s settled-timeline bookkeeping exactly.
-    oh_hours carries the naive/RL over-allocation.
+    Pilot (policy 5) counts like BigJob (single job wait / wf end).
+
+    oh_hours carries the naive/RL over-allocation, plus — for the pilot
+    policy — the pilot's packing waste (charged once the pilot actually
+    starts, mirroring ``run_pilot``), plus the core-seconds lost to
+    fault kills (work the killed attempts consumed before restarting).
+    The pilot's waste is already *inside* its single row's
+    cores × duration, so its core_hours does NOT re-add oh_hours —
+    preserving the CH(pilot) == CH(asa) + OH(pilot) identity that
+    ``run_pilot`` satisfies on the event engine.
     """
     n = s.status.shape[0]
     wf = s.is_wf
@@ -65,19 +74,28 @@ def metrics(s: ScenarioState) -> dict[str, jax.Array]:
     wf_end = jnp.max(jnp.where(wf, s.end, -jnp.inf))
     makespan = jnp.where(asa_like, le, wf_end) - s.t0
     core_seconds = jnp.sum(jnp.where(wf, s.cores * s.duration, 0.0))
-    oh_hours = s.oh_cs / 3600.0
+    restart_hours = s.restart_cs / 3600.0
+    is_pilot = s.policy == PILOT
+    started_any = jnp.any(wf & jnp.isfinite(s.start))
+    pilot_oh = jnp.where(started_any, s.pilot_waste_cs, 0.0) / 3600.0
+    oh_hours = jnp.where(is_pilot, pilot_oh,
+                         s.oh_cs / 3600.0) + restart_hours
+    core_hours = core_seconds / 3600.0 + jnp.where(is_pilot, restart_hours,
+                                                   oh_hours)
     done = jnp.sum((wf & (s.status == DONE)).astype(jnp.int32))
     total_wf = jnp.sum(wf.astype(jnp.int32))
     util = s.busy_cs / jnp.maximum(s.total * s.t, 1e-9)
     return {
         "twt_s": twt,
         "makespan_s": makespan,
-        "core_hours": core_seconds / 3600.0 + oh_hours,
+        "core_hours": core_hours,
         "oh_hours": oh_hours,
         "misses": s.misses,
         "utilization": util,
         "wf_done": done,
         "wf_total": total_wf,
+        "restarts": s.restarts,
+        "restart_hours": restart_hours,
         "policy": s.policy,
     }
 

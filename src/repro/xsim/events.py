@@ -75,6 +75,7 @@ from jax.experimental.shard_map import shard_map
 from repro.core import asa
 from repro.core.bins import make_bins
 from repro.obs import trace as obs_trace
+from repro.runtime.fault import FAULT_DRAIN, FAULT_FAIL, FAULT_GROW
 from repro.sched.strategies import (NAIVE_CANCEL_LATENCY_S,
                                     NAIVE_IDLE_THRESHOLD_S)
 from repro.xsim import backfill
@@ -103,25 +104,43 @@ def _job_stage(s: ScenarioState) -> jax.Array:
     return jnp.full(n, -1, jnp.int32).at[tgt].set(y, mode="drop")
 
 
-def next_event_time(s: ScenarioState, naive: bool = True) -> jax.Array:
-    """Earliest pending submit or running end; +inf when nothing remains.
+def next_event_time(s: ScenarioState, naive: bool = True,
+                    faults: bool = False) -> jax.Array:
+    """Earliest pending submit, running end or unprocessed capacity fault;
+    +inf when nothing remains.
 
     CANCELLED rows with a finite submit are naive resubmissions waiting
     for their corrected time; ``repass`` pins the next step to the current
-    instant (mid-event estimator/cancel cascades)."""
+    instant (mid-event estimator/cancel cascades). ``faults=False``
+    (static) elides the fault-schedule term entirely."""
     submittable = s.status == PENDING
     if naive:
         submittable |= s.status == CANCELLED
     submits = jnp.where(submittable, s.submit, jnp.inf)
     ends = jnp.where(s.status == RUNNING, s.end, jnp.inf)
     nxt = jnp.minimum(jnp.min(submits), jnp.min(ends))
+    if faults and s.fault_t.shape[0]:
+        nf = s.fault_t.shape[0]
+        i = jnp.clip(s.fault_next, 0, nf - 1)
+        ft = jnp.where(s.fault_next < nf, s.fault_t[i], jnp.inf)
+        nxt = jnp.minimum(nxt, ft)
     return jnp.where(s.repass, s.t, nxt)
 
 
-def complete_jobs(s: ScenarioState, now) -> tuple[ScenarioState, jax.Array]:
+def complete_jobs(s: ScenarioState, now, faults: bool = False
+                  ) -> tuple[ScenarioState, jax.Array]:
     done = (s.status == RUNNING) & (s.end <= now)
     freed = jnp.sum(jnp.where(done, s.cores, 0.0))
-    s = s._replace(status=jnp.where(done, DONE, s.status), free=s.free + freed)
+    if faults:
+        # draining nodes leave as their work completes: freed cores pay
+        # outstanding drain debt before returning to the free pool
+        pay = jnp.minimum(freed, s.cap_debt)
+        s = s._replace(status=jnp.where(done, DONE, s.status),
+                       free=s.free + freed - pay, total=s.total - pay,
+                       cap_debt=s.cap_debt - pay)
+    else:
+        s = s._replace(status=jnp.where(done, DONE, s.status),
+                       free=s.free + freed)
     return s, done
 
 
@@ -158,6 +177,102 @@ def _release_naive_resubmit(s: ScenarioState, newly_done, now
     succ = jnp.where(fire, s.wf_next, n)
     submit = s.submit.at[succ].set(now, mode="drop")
     return s._replace(submit=submit), fire, succ_c
+
+
+def _apply_faults(s: ScenarioState, now) -> ScenarioState:
+    """Process every capacity-fault event due at ``now``, in schedule order.
+
+    One bounded ``while_loop`` iteration per due event (events are
+    time-sorted at build; ``fault_next`` is the cursor). Semantics, with
+    the conservation invariant ``total − free == Σ running cores`` held
+    through every transition:
+
+    * GROW d: nodes join — ``total += d``, ``free += d``.
+    * DRAIN d (clamped to the machine present): what is free leaves now;
+      the remainder becomes ``cap_debt``, collected by ``complete_jobs``
+      from freed cores as running work finishes — a graceful shrink, no
+      job is disturbed.
+    * FAIL d (clamped): nodes die now. Free cores cover what they can;
+      the deficit is covered by killing running jobs — most recently
+      started first (LIFO, the cheapest work to lose; ties broken by row
+      index), a deterministic rule that keeps the scan reproducible.
+      Killed jobs are requeued in place (RUNNING → QUEUED, original
+      submit time kept, so they retain their FCFS seniority, like a
+      Slurm requeue) and restart from scratch; the attempt's lost
+      core-seconds accrue to ``restart_cs`` and ``restarts`` counts the
+      kills — ``compare.metrics`` reports both.
+
+    Completions at the same instant land BEFORE the fault (a job ending
+    exactly when the node dies finished); admissions and the scheduling
+    pass land after, so requeued jobs can restart within the same step
+    when capacity allows. A dynamically empty schedule (all +inf) never
+    enters the loop: bit-identical to the fault-free program.
+    """
+    nf = s.fault_t.shape[0]
+    if nf == 0:
+        return s
+    n = s.status.shape[0]
+
+    def cond(s: ScenarioState):
+        i = jnp.clip(s.fault_next, 0, nf - 1)
+        return (s.fault_next < nf) & (s.fault_t[i] <= now)
+
+    def body(s: ScenarioState):
+        i = jnp.clip(s.fault_next, 0, nf - 1)
+        d = s.fault_c[i]
+        k = s.fault_k[i]
+        is_grow = k == FAULT_GROW
+        is_drain = k == FAULT_DRAIN
+        is_fail = k == FAULT_FAIL
+        # you can never lose more cores than are physically present
+        d_s = jnp.minimum(d, s.total)
+
+        # DRAIN: remove what is free now, owe the rest
+        rm = jnp.minimum(s.free, d_s)
+
+        # FAIL: kill most-recently-started running jobs to cover the
+        # deficit (free cores absorb the loss first)
+        deficit = jnp.where(is_fail, d_s - s.free, 0.0)
+        running = s.status == RUNNING
+        order = jnp.argsort(jnp.where(running, -s.start, jnp.inf))
+        c_sorted = jnp.where(running, s.cores, 0.0)[order]
+        csum = jnp.cumsum(c_sorted)
+        kill_sorted = (csum - c_sorted < deficit) & (c_sorted > 0.0)
+        kill = (jnp.zeros(n, bool).at[order].set(kill_sorted)
+                & running & is_fail)
+        killed = jnp.sum(jnp.where(kill, s.cores, 0.0))
+        lost_cs = jnp.sum(jnp.where(kill, s.cores * (now - s.start), 0.0))
+
+        free = jnp.where(
+            is_grow, s.free + d,
+            jnp.where(is_drain, s.free - rm,
+                      jnp.where(is_fail, s.free + killed - d_s, s.free)))
+        total = jnp.where(
+            is_grow, s.total + d,
+            jnp.where(is_drain, s.total - rm,
+                      jnp.where(is_fail, s.total - d_s, s.total)))
+
+        tr = s.trace
+        if tr is not None:
+            row_i = jnp.arange(n, dtype=jnp.int32)
+            tr = obs_trace.append_segments(
+                tr, [(kill, obs_trace.EV_KILL, row_i, _job_stage(s),
+                      s.cores)], t=now, policy=s.policy, step=s.steps)
+        return s._replace(
+            trace=tr,
+            free=free,
+            total=total,
+            min_free=jnp.minimum(s.min_free, free),
+            cap_debt=s.cap_debt + jnp.where(is_drain, d_s - rm, 0.0),
+            status=jnp.where(kill, QUEUED, s.status),
+            start=jnp.where(kill, jnp.inf, s.start),
+            end=jnp.where(kill, jnp.inf, s.end),
+            restarts=s.restarts + jnp.sum(kill).astype(jnp.int32),
+            restart_cs=s.restart_cs + lost_cs,
+            fault_next=s.fault_next + 1,
+        )
+
+    return jax.lax.while_loop(cond, body, s)
 
 
 def _start_hook(s: ScenarioState, now, bins, naive: bool) -> ScenarioState:
@@ -387,7 +502,7 @@ def _drain_hooks(s: ScenarioState, now, bins, greedy, naive: bool,
 def sim_step(s: ScenarioState, bins, *, bf_passes: int = backfill.BF_PASSES,
              freed_mode: str = "ref", pred_mode: str | None = None,
              naive: bool = True, params=None,
-             rl_mode: str = "sample") -> ScenarioState:
+             rl_mode: str = "sample", faults: bool = False) -> ScenarioState:
     """One event step. ``pred_mode`` None reads the per-scenario
     ``pred_greedy`` flag (traced); ``"greedy"``/``"sample"`` stake the
     prediction rule out statically — the greedy fleet hot path then never
@@ -396,12 +511,15 @@ def sim_step(s: ScenarioState, bins, *, bf_passes: int = backfill.BF_PASSES,
     shares the cancel/resubmit world), eliding that machinery;
     ``grid.run_grid`` sets it from the grid's policy roster. ``params`` /
     ``rl_mode`` feed the learned-policy chain-hook branch (see
-    ``_chain_hook``); ``params=None`` elides it."""
+    ``_chain_hook``); ``params=None`` elides it. ``faults=False`` asserts
+    (statically) that no scenario carries capacity-fault events, eliding
+    the fault machinery (``_apply_faults`` + drain-debt collection) —
+    ``grid.run_grid`` sets it from the grid's fault schedules."""
     if rl_mode not in ("sample", "greedy"):
         raise ValueError(f"unknown rl_mode {rl_mode!r}")
     greedy = {None: s.pred_greedy, "greedy": True,
               "sample": False}[pred_mode]
-    nxt = next_event_time(s, naive)
+    nxt = next_event_time(s, naive, faults)
     now = jnp.where(jnp.isfinite(nxt), jnp.maximum(nxt, s.t), s.t)
     # utilization integral over (t, now] at the pre-event allocation
     busy_cs = s.busy_cs + (s.total - s.free) * (now - s.t)
@@ -409,12 +527,16 @@ def sim_step(s: ScenarioState, bins, *, bf_passes: int = backfill.BF_PASSES,
                    # drained lanes don't count: `steps` is the
                    # events-executed profile signal vs. the n_steps budget
                    steps=s.steps + jnp.isfinite(nxt).astype(jnp.int32))
-    s, newly_done = complete_jobs(s, now)
+    s, newly_done = complete_jobs(s, now, faults)
     s = _release_per_stage(s, newly_done, now)
     resub_fire = resub_succ = None
     if naive:
         s, resub_fire, resub_succ = _release_naive_resubmit(
             s, newly_done, now)
+    if faults:
+        # after completions (a job ending at the fault instant finished),
+        # before admissions/scheduling (which see post-fault capacity)
+        s = _apply_faults(s, now)
     s, newly_admitted = admit_jobs(s, now, naive)
     # first admissions of ASA/naive stages queue a chain-hook event
     # (the -inf expected_end sentinel keeps resubmissions from re-firing)
@@ -452,13 +574,13 @@ CHUNK_STEPS = 8  # scan-chunk size between drain checks (see `simulate`)
 @functools.partial(jax.jit,
                    static_argnames=("n_steps", "chunk_steps", "bf_passes",
                                     "freed_mode", "pred_mode", "naive",
-                                    "rl_mode"))
+                                    "rl_mode", "faults"))
 def simulate(s: ScenarioState, *, n_steps: int,
              chunk_steps: int = CHUNK_STEPS,
              bf_passes: int = backfill.BF_PASSES,
              freed_mode: str = "ref", pred_mode: str | None = None,
              naive: bool = True, params=None,
-             rl_mode: str = "sample") -> ScenarioState:
+             rl_mode: str = "sample", faults: bool = False) -> ScenarioState:
     """Run up to ~``n_steps`` event steps, stopping early once drained.
 
     The scan is split into a static ``n_steps % chunk_steps`` remainder
@@ -482,7 +604,7 @@ def simulate(s: ScenarioState, *, n_steps: int,
     def body(s, _):
         return sim_step(s, bins, bf_passes=bf_passes, freed_mode=freed_mode,
                         pred_mode=pred_mode, naive=naive, params=params,
-                        rl_mode=rl_mode), None
+                        rl_mode=rl_mode, faults=faults), None
 
     if chunk_steps <= 0:
         s, _ = jax.lax.scan(body, s, None, length=n_steps)
@@ -494,7 +616,8 @@ def simulate(s: ScenarioState, *, n_steps: int,
 
     def chunk_cond(carry):
         s, i = carry
-        return (i < n_chunks) & jnp.isfinite(next_event_time(s, naive))
+        return (i < n_chunks) & jnp.isfinite(
+            next_event_time(s, naive, faults))
 
     def chunk_body(carry):
         s, i = carry
@@ -508,13 +631,13 @@ def simulate(s: ScenarioState, *, n_steps: int,
 @functools.partial(jax.jit,
                    static_argnames=("n_steps", "chunk_steps", "bf_passes",
                                     "freed_mode", "pred_mode", "naive",
-                                    "rl_mode"))
+                                    "rl_mode", "faults"))
 def sweep(batched: ScenarioState, *, n_steps: int,
           chunk_steps: int = CHUNK_STEPS,
           bf_passes: int = backfill.BF_PASSES,
           freed_mode: str = "ref", pred_mode: str | None = None,
           naive: bool = True, params=None,
-          rl_mode: str = "sample") -> ScenarioState:
+          rl_mode: str = "sample", faults: bool = False) -> ScenarioState:
     """The fleet program: vmap(simulate) over a batched ScenarioState.
 
     ``freed_mode="tpu"`` routes the reservation scan through the Pallas
@@ -528,13 +651,13 @@ def sweep(batched: ScenarioState, *, n_steps: int,
         lambda s: simulate(s, n_steps=n_steps, chunk_steps=chunk_steps,
                            bf_passes=bf_passes, freed_mode=freed_mode,
                            pred_mode=pred_mode, naive=naive, params=params,
-                           rl_mode=rl_mode)
+                           rl_mode=rl_mode, faults=faults)
     )(batched)
 
 
 @functools.lru_cache(maxsize=None)
 def _sharded_sweep_fn(mesh, n_steps, chunk_steps, bf_passes, freed_mode,
-                      pred_mode, naive, rl_mode, with_params):
+                      pred_mode, naive, rl_mode, faults, with_params):
     """Compiled shard_map(sweep) for one (mesh, static-config) cell.
 
     Cached so repeated sweeps (warm_fleet rounds, RL iterations, bench
@@ -551,7 +674,7 @@ def _sharded_sweep_fn(mesh, n_steps, chunk_steps, bf_passes, freed_mode,
         return sweep(shard, n_steps=n_steps, chunk_steps=chunk_steps,
                      bf_passes=bf_passes, freed_mode=freed_mode,
                      pred_mode=pred_mode, naive=naive, params=params,
-                     rl_mode=rl_mode)
+                     rl_mode=rl_mode, faults=faults)
 
     if with_params:
         fn = shard_map(block, mesh=mesh,
@@ -568,7 +691,8 @@ def sharded_sweep(batched: ScenarioState, *, mesh, n_steps: int,
                   bf_passes: int = backfill.BF_PASSES,
                   freed_mode: str = "ref", pred_mode: str | None = None,
                   naive: bool = True, params=None,
-                  rl_mode: str = "sample") -> ScenarioState:
+                  rl_mode: str = "sample",
+                  faults: bool = False) -> ScenarioState:
     """``sweep`` split over the devices of a 1-D ``scenarios`` mesh.
 
     Each device runs the plain vmapped program on its contiguous block of
@@ -590,7 +714,7 @@ def sharded_sweep(batched: ScenarioState, *, mesh, n_steps: int,
     b = pfleet.batch_size(batched)
     padded, _mask = pfleet.pad_batch(batched, n_shards)
     fn = _sharded_sweep_fn(mesh, n_steps, chunk_steps, bf_passes,
-                           freed_mode, pred_mode, naive, rl_mode,
+                           freed_mode, pred_mode, naive, rl_mode, faults,
                            params is not None)
     out = fn(padded, params) if params is not None else fn(padded)
     return pfleet.unpad(out, b)

@@ -24,10 +24,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.obs import trace as obs_trace
+from repro.runtime.fault import FaultSchedule
 from repro.sched.centers import CENTERS, CenterProfile
+from repro.sched.strategies import PILOT_STARTUP_S, PILOT_TASK_LATENCY_S
 from repro.sched.workflows import WORKFLOWS, Workflow
 from repro.xsim import backfill, events, policies
-from repro.xsim.state import (ASA_NAIVE, BIGJOB, INVALID, PENDING,
+from repro.xsim.state import (ASA_NAIVE, BIGJOB, INVALID, PENDING, PILOT,
                               POLICY_NAMES, QUEUED, RL, RL_FEATURES,
                               RUNNING, ScenarioState)
 
@@ -85,6 +87,9 @@ class XSimConfig:
     trace_capacity: int = 0  # event-ring slots per scenario
     #   (repro.obs.trace); 0 = untraced, statically — no trace ops are
     #   ever staged and the sweep is the pre-observability program.
+    n_faults: int = 0        # capacity-fault slots per scenario
+    #   (runtime.fault.FaultSchedule events); 0 = no fault machinery is
+    #   ever staged and the sweep is the pre-faults program, bit for bit.
 
     def __post_init__(self) -> None:
         if self.pred_mode not in ("greedy", "sample"):
@@ -95,6 +100,8 @@ class XSimConfig:
         if self.trace_capacity < 0:
             raise ValueError(f"trace_capacity must be >= 0, got "
                              f"{self.trace_capacity}")
+        if self.n_faults < 0:
+            raise ValueError(f"n_faults must be >= 0, got {self.n_faults}")
 
     @property
     def max_jobs(self) -> int:
@@ -129,19 +136,26 @@ class XSimConfig:
         step-budget half of the event-bound optimization — and the
         chunked drain exit makes any remaining overcount nearly free
         (drained scenarios stop stepping, so only truly long scenarios
-        ever touch the budget tail)."""
-        return 2 * self.max_jobs + 2 * self.max_stages + 16
+        ever touch the budget tail). Each capacity fault costs one event
+        step of its own plus, in the worst FAIL case, one extra
+        completion-and-restart step per killed-and-requeued job — hence
+        the ``n_faults · (1 + max_jobs)`` term."""
+        return (2 * self.max_jobs + 2 * self.max_stages + 16
+                + self.n_faults * (1 + self.max_jobs))
 
 
 def build_scenario(key: jax.Array, center: XCenter, wf_cores: jax.Array,
                    wf_durs: jax.Array, wf_valid: jax.Array,
-                   est, policy: jax.Array,
+                   est, policy: jax.Array, fault_t: jax.Array,
+                   fault_c: jax.Array, fault_k: jax.Array,
                    cfg: XSimConfig) -> ScenarioState:
     """One scenario as a pure function of (key, cell data). vmap freely.
 
     ``est`` is the scenario's live Algorithm-1 estimator (its geometry's
     fleet slice, see ``policies.scenario_estimators``) — predictions are
-    sampled from it, and it learns, inside the event scan."""
+    sampled from it, and it learns, inside the event scan.
+    ``fault_t``/``fault_c``/``fault_k`` are the scenario's capacity-fault
+    schedule as (cfg.n_faults,) arrays (``FaultSchedule.as_arrays``)."""
     k_warm_c, k_warm_d, k_warm_u, k_back_c, k_back_d, k_arr_g, k_arr_b, \
         k_arr_c, k_arr_d = jax.random.split(key, 9)
     total = center.total_cores
@@ -187,23 +201,33 @@ def build_scenario(key: jax.Array, center: XCenter, wf_cores: jax.Array,
     ad = durations(k_arr_d, cfg.n_arrivals)
     a_ok = a_submit <= cfg.horizon
 
-    # --- workflow rows (policy is data: all four variants, selected) ----
+    # --- workflow rows (policy is data: all variants, selected) ---------
     wf_off = cfg.n_warm + cfg.n_backlog + cfg.n_arrivals
     y = jnp.arange(cfg.max_stages)
     peak = jnp.max(wf_cores)
     total_dur = jnp.sum(jnp.where(wf_valid, wf_durs, 0.0))
+    n_stages = jnp.sum(wf_valid.astype(jnp.float32))
+    useful_cs = jnp.sum(jnp.where(wf_valid, wf_cores * wf_durs, 0.0))
     is_big = policy == BIGJOB
+    is_pilot = policy == PILOT
+    # BigJob and the pilot both submit ONE peak-cores monolith; the pilot
+    # additionally pays its bootstrap + per-stage internal dispatch
+    # latency on the walltime (strategies.pilot_duration, mirrored here)
+    single = is_big | is_pilot
+    pilot_dur = total_dur + PILOT_STARTUP_S + n_stages * PILOT_TASK_LATENCY_S
+    single_dur = jnp.where(is_pilot, pilot_dur, total_dur)
     # ASA-Naive + the learned policy: cascade rows, no afterok edge
     no_dep = (policy == ASA_NAIVE) | (policy == RL)
-    f_valid = jnp.where(is_big, y == 0, wf_valid)
-    f_cores = jnp.where(is_big, jnp.where(y == 0, peak, 0.0), wf_cores)
-    f_durs = jnp.where(is_big, jnp.where(y == 0, total_dur, 0.0), wf_durs)
+    f_valid = jnp.where(single, y == 0, wf_valid)
+    f_cores = jnp.where(single, jnp.where(y == 0, peak, 0.0), wf_cores)
+    f_durs = jnp.where(single, jnp.where(y == 0, single_dur, 0.0), wf_durs)
     f_submit = jnp.where(y == 0, cfg.t0, jnp.inf)
     nxt_valid = jnp.concatenate([f_valid[1:], jnp.zeros(1, bool)])
-    f_next = jnp.where(f_valid & nxt_valid & ~is_big, wf_off + y + 1, -1)
-    f_dep = jnp.where(f_valid & (y > 0) & ~is_big & ~no_dep,
+    f_next = jnp.where(f_valid & nxt_valid & ~single, wf_off + y + 1, -1)
+    f_dep = jnp.where(f_valid & (y > 0) & ~single & ~no_dep,
                       wf_off + y - 1, -1)
     f_rows = jnp.where(f_valid, wf_off + y, -1)
+    waste_cs = jnp.where(is_pilot, peak * pilot_dur - useful_cs, 0.0)
 
     # --- assemble the table ---------------------------------------------
     def cat(warm, back, arr, wf):
@@ -253,14 +277,22 @@ def build_scenario(key: jax.Array, center: XCenter, wf_cores: jax.Array,
         repass=jnp.asarray(False),
         pred_greedy=jnp.asarray(cfg.pred_mode == "greedy"),
         steps=jnp.int32(0),
+        fault_t=fault_t.astype(jnp.float32),
+        fault_c=fault_c.astype(jnp.float32),
+        fault_k=fault_k.astype(jnp.int32),
+        fault_next=jnp.int32(0),
+        cap_debt=jnp.float32(0.0),
+        restarts=jnp.int32(0),
+        restart_cs=jnp.float32(0.0),
+        pilot_waste_cs=waste_cs.astype(jnp.float32),
         trace=(obs_trace.init(cfg.trace_capacity)
                if cfg.trace_capacity else None),
     )
 
 
 build_batch = jax.jit(
-    jax.vmap(build_scenario, in_axes=(0, 0, 0, 0, 0, 0, 0, None)),
-    static_argnums=(7,))
+    jax.vmap(build_scenario, in_axes=(0,) * 10 + (None,)),
+    static_argnums=(10,))
 
 
 @dataclass
@@ -274,6 +306,9 @@ class ScenarioGrid:
     wf_durs: jax.Array            # (B, S)
     wf_valid: jax.Array           # (B, S)
     policies: jax.Array           # (B,)
+    fault_t: jax.Array            # (B, n_faults) fault times, +inf pad
+    fault_c: jax.Array            # (B, n_faults) core deltas (>= 0)
+    fault_k: jax.Array            # (B, n_faults) FAULT_* kinds
     geo_idx: np.ndarray           # (B,) geometry id (center, scale) per row
     labels: list[dict]            # per-scenario {center, scale, workflow, ...}
 
@@ -281,11 +316,18 @@ class ScenarioGrid:
     def n(self) -> int:
         return int(self.policies.shape[0])
 
+    @property
+    def has_faults(self) -> bool:
+        """Static: any fault slots at all (cfg.n_faults > 0). Statically
+        False elides the whole fault path from the swept program."""
+        return int(self.fault_t.shape[1]) > 0
+
     def build(self, ests) -> ScenarioState:
         """``ests`` is a (B,)-batched ASAState (per-scenario estimators)."""
         return build_batch(self.keys, self.centers, self.wf_cores,
                            self.wf_durs, self.wf_valid, ests,
-                           self.policies, self.cfg)
+                           self.policies, self.fault_t, self.fault_c,
+                           self.fault_k, self.cfg)
 
 
 def make_grid(cfg: XSimConfig,
@@ -295,7 +337,7 @@ def make_grid(cfg: XSimConfig,
               policy_ids: Sequence[int] = (0, 1, 2),
               n_seeds: int = 4, shrink: float = 1.0 / 64.0,
               scales: Sequence[int] | None = None,
-              seed: int = 0) -> ScenarioGrid:
+              seed: int = 0, fault_sched=None) -> ScenarioGrid:
     """The full scenario product, flattened to one batch.
 
     Cells = centers × their paper scales × workflows × policies × seeds.
@@ -303,12 +345,24 @@ def make_grid(cfg: XSimConfig,
     so the slotted tables stay small; workflow scales shrink alongside.
     ``workflows`` entries are names in ``WORKFLOWS`` or ``Workflow``
     instances (custom stage profiles, e.g. single-stage probes).
+
+    ``fault_sched`` injects capacity faults (``cfg.n_faults`` must cover
+    the longest schedule): a ``runtime.fault.FaultSchedule`` applied to
+    every scenario, or a callable ``label_dict -> FaultSchedule`` for
+    per-scenario schedules (see ``repro.xsim.families`` for the standard
+    robustness families). Event ``frac`` values are fractions of the
+    center's *original* (shrunk) total cores, converted to whole cores
+    host-side here.
     """
-    cells, labels, geo, bg_keys = [], [], [], []
+    cells, labels, geo, bg_keys, faults = [], [], [], [], []
+    if fault_sched is not None and cfg.n_faults == 0:
+        raise ValueError("fault_sched given but cfg.n_faults == 0; set "
+                         "XSimConfig(n_faults=...) to size the fault slots")
     base = jax.random.PRNGKey(seed)
     geo_ids: dict[tuple[str, int], int] = {}
     for cname in center_names:
         profile = CENTERS[cname]
+        total_cores = float(max(profile.total_cores * shrink, 8.0))
         for scale in (scales or profile.scales):
             eff_scale = max(int(round(scale * shrink)), 2)
             gid = geo_ids.setdefault((cname, scale), len(geo_ids))
@@ -325,10 +379,15 @@ def make_grid(cfg: XSimConfig,
                         # identical machine, as run_table1 does
                         bg_keys.append(jax.random.fold_in(
                             base, gid * 100_003 + s))
-                        labels.append(dict(center=cname, scale=scale,
-                                           workflow=wf.name,
-                                           strategy=POLICY_NAMES[pol],
-                                           seed=s))
+                        lab = dict(center=cname, scale=scale,
+                                   workflow=wf.name,
+                                   strategy=POLICY_NAMES[pol],
+                                   seed=s)
+                        labels.append(lab)
+                        sched = (fault_sched(lab) if callable(fault_sched)
+                                 else fault_sched) or FaultSchedule()
+                        faults.append(sched.as_arrays(cfg.n_faults,
+                                                      total_cores))
     B = len(cells)
     if B == 0:
         raise ValueError(
@@ -347,6 +406,9 @@ def make_grid(cfg: XSimConfig,
         wf_durs=jnp.stack([jnp.asarray(c[2]) for c in cells]),
         wf_valid=jnp.stack([jnp.asarray(c[3]) for c in cells]),
         policies=jnp.asarray([c[4] for c in cells], jnp.int32),
+        fault_t=jnp.stack([jnp.asarray(f[0]) for f in faults]),
+        fault_c=jnp.stack([jnp.asarray(f[1]) for f in faults]),
+        fault_k=jnp.stack([jnp.asarray(f[2]) for f in faults]),
         geo_idx=np.asarray(geo),
         labels=labels,
     )
@@ -401,7 +463,7 @@ def run_grid(grid: ScenarioGrid, fleet=None, *, pred_seed: int = 1,
     kw = dict(n_steps=grid.cfg.n_steps, chunk_steps=grid.cfg.chunk_steps,
               bf_passes=bf_passes, freed_mode=freed_mode,
               pred_mode=grid.cfg.pred_mode, naive=has_naive, params=params,
-              rl_mode=rl_mode)
+              rl_mode=rl_mode, faults=grid.has_faults)
     if mesh is None:
         final = events.sweep(states, **kw)
     else:
@@ -432,9 +494,10 @@ def warm_fleet(fleet, grid: ScenarioGrid, rounds: int = 2, k: int = 8,
     scenarios); ``n_shards``/``mesh`` likewise select its device-parallel
     sweep path."""
     n_geo = fleet.log_p.shape[0]
-    # BigJob's row 0 is the peak-cores monolith, not a stage-shaped job —
-    # exclude it so each geometry learns from clean stage-0 samples
-    stagelike = np.array([lab["strategy"] != "bigjob"
+    # BigJob's and the pilot's row 0 is the peak-cores monolith, not a
+    # stage-shaped job — exclude them so each geometry learns from clean
+    # stage-0 samples
+    stagelike = np.array([lab["strategy"] not in ("bigjob", "pilot")
                           for lab in grid.labels])
     if mesh is None and n_shards is not None:
         from repro.launch.mesh import make_scenarios_mesh

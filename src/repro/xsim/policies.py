@@ -30,8 +30,9 @@ import jax.numpy as jnp
 from repro.core import asa
 from repro.core.bins import make_bins
 from repro.core.losses import zero_one
+from repro.sched import strategies
 from repro.sched.workflows import Workflow
-from repro.xsim.state import ASA, ASA_NAIVE, BIGJOB, PENDING, add_job
+from repro.xsim.state import ASA, ASA_NAIVE, BIGJOB, PENDING, PILOT, add_job
 
 # ------------------------------------------------------------ stage tables
 
@@ -67,6 +68,14 @@ def add_workflow(table: dict[str, np.ndarray], offset: int, wf: Workflow,
         add_job(table, offset, cores=wf.peak_cores(scale),
                 duration=wf.total_exec(scale), submit=t0, status=PENDING,
                 is_wf=True)
+        return 1
+    if policy == PILOT:
+        # one pilot allocation at peak width; the stages cycle inside it,
+        # so its walltime adds the pilot bootstrap + per-stage dispatch
+        # latency on top of the serialized stage work (run_pilot's model)
+        add_job(table, offset, cores=wf.peak_cores(scale),
+                duration=strategies.pilot_duration(wf, scale), submit=t0,
+                status=PENDING, is_wf=True)
         return 1
     s = len(wf.stages)
     with_dep = policy == ASA  # naive (§4.5) + RL: no dependency support

@@ -50,8 +50,9 @@ PER_STAGE = 1
 ASA = 2
 ASA_NAIVE = 3
 RL = 4         # learned submission-policy head (repro.rl), naive-world rows
+PILOT = 5      # pilot job: one peak-cores allocation, stages cycled inside
 
-POLICY_NAMES = ("bigjob", "per_stage", "asa", "asa_naive", "rl")
+POLICY_NAMES = ("bigjob", "per_stage", "asa", "asa_naive", "rl", "pilot")
 
 INF = jnp.inf
 
@@ -109,6 +110,17 @@ class ScenarioState(NamedTuple):
     pred_greedy: jax.Array  # bool () MAP (consistent) vs line-4 sampled a_y
     steps: jax.Array        # i32 () event steps executed (drained no-ops
     #   don't count) — the budget-vs-event profile signal
+    # capacity faults (runtime.fault.FaultSchedule, per-scenario data) ------
+    fault_t: jax.Array      # f32 (n_faults,) event times, sorted; +inf pad
+    fault_c: jax.Array      # f32 (n_faults,) capacity delta in cores (>= 0)
+    fault_k: jax.Array      # i32 (n_faults,) FAULT_FAIL / DRAIN / GROW
+    fault_next: jax.Array   # i32 () next unprocessed fault-event index
+    cap_debt: jax.Array     # f32 () draining cores still owed (collected
+    #   from freed cores as running work completes)
+    restarts: jax.Array     # i32 () jobs killed by failures and requeued
+    restart_cs: jax.Array   # f32 () lost core-seconds of killed attempts
+    pilot_waste_cs: jax.Array  # f32 () pilot over-allocation core-seconds
+    #   (packing waste + startup + dispatch), charged once the pilot runs
     # observability ---------------------------------------------------------
     trace: "obs_trace.TraceBuffer | None" = None  # event ring buffer
     #   (repro.obs.trace); None statically elides every trace append —
@@ -137,7 +149,9 @@ def freeze(table: dict[str, np.ndarray], *, total_cores: float,
            t0: float = 0.0, max_stages: int = 9,
            est: asa.ASAState | None = None,
            est_seed: int = 0, pred_mode: str = "sample",
-           trace_capacity: int = 0) -> ScenarioState:
+           trace_capacity: int = 0, fault_sched=None,
+           n_faults: int | None = None,
+           pilot_waste_cs: float = 0.0) -> ScenarioState:
     """Build a device ScenarioState from a host-side table + scalars.
 
     ``wf_rows`` (the stage chain) is derived from ``is_wf`` row order.
@@ -151,12 +165,27 @@ def freeze(table: dict[str, np.ndarray], *, total_cores: float,
     ``trace_capacity > 0`` attaches a ``repro.obs.trace`` event ring of
     that many slots; 0 (default) leaves ``trace=None`` — the untraced
     program, statically.
+    ``fault_sched`` (a ``runtime.fault.FaultSchedule``) attaches a
+    capacity-fault schedule; ``n_faults`` pads the event arrays to a
+    fixed slot count (default: exactly the schedule's length). Run the
+    result with ``events.simulate(..., faults=True)`` — the fault
+    machinery is statically elided otherwise.
+    ``pilot_waste_cs`` is the PILOT policy's over-allocation
+    core-seconds (``sched.strategies.pilot_waste_cs``), charged as OH by
+    ``compare.metrics`` once the pilot row runs.
     """
+    from repro.runtime.fault import FaultSchedule
+
     if pred_mode not in ("sample", "greedy"):
         raise ValueError(f"unknown pred_mode {pred_mode!r}")
     if trace_capacity < 0:
         raise ValueError(
             f"trace_capacity must be >= 0, got {trace_capacity}")
+    if fault_sched is None:
+        fault_sched = FaultSchedule()
+    if n_faults is None:
+        n_faults = len(fault_sched)
+    ft, fc, fk = fault_sched.as_arrays(n_faults, total_cores)
     max_jobs = table["status"].shape[0]
     wf_idx = np.nonzero(table["is_wf"])[0]
     if len(wf_idx) > max_stages:
@@ -187,6 +216,14 @@ def freeze(table: dict[str, np.ndarray], *, total_cores: float,
         repass=jnp.asarray(False),
         pred_greedy=jnp.asarray(pred_mode == "greedy"),
         steps=jnp.int32(0),
+        fault_t=jnp.asarray(ft),
+        fault_c=jnp.asarray(fc),
+        fault_k=jnp.asarray(fk),
+        fault_next=jnp.int32(0),
+        cap_debt=jnp.float32(0.0),
+        restarts=jnp.int32(0),
+        restart_cs=jnp.float32(0.0),
+        pilot_waste_cs=jnp.float32(pilot_waste_cs),
         trace=obs_trace.init(trace_capacity) if trace_capacity else None,
     )
 

@@ -1,0 +1,65 @@
+"""Docs drift gate: scripts/check_docs.py keeps the markdown honest.
+
+Positive: the committed docs must be clean — every ``--flag`` and every
+``python -m`` invocation a README mentions exists in the code. Negative:
+a doc citing a missing module or a flag absent from the referenced
+parsers must fail with a named ``file:line`` error (so the check can
+never silently pass on drift).
+"""
+
+import importlib.util
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+_spec = importlib.util.spec_from_file_location(
+    "check_docs", REPO / "scripts" / "check_docs.py")
+check_docs = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(check_docs)
+
+
+def test_repo_docs_are_clean(capsys):
+    assert check_docs.main() == 0
+    assert "clean" in capsys.readouterr().out
+
+
+def test_checked_set_includes_the_readmes():
+    names = {str(p.relative_to(REPO)) for p in check_docs.find_docs()}
+    assert "README.md" in names
+    assert "src/repro/xsim/README.md" in names
+    # planning/reference material is deliberately out of scope
+    assert "ISSUE.md" not in names
+    assert "SNIPPETS.md" not in names
+
+
+def test_parser_flags_reads_argparse_without_importing():
+    flags = check_docs.parser_flags(REPO / "benchmarks" / "run.py")
+    assert {"--engine", "--policy", "--family", "--json"} <= flags
+
+
+def test_bogus_flag_fails(tmp_path):
+    bad = tmp_path / "bad.md"
+    bad.write_text("Run `python -m benchmarks.run --engine xsim "
+                   "--no-such-flag`.\n")
+    errs = check_docs.check_file(bad)
+    assert len(errs) == 1
+    assert "--no-such-flag" in errs[0] and "bad.md:1" in errs[0]
+    assert check_docs.main([bad]) == 1
+
+
+def test_missing_module_fails(tmp_path):
+    bad = tmp_path / "bad.md"
+    bad.write_text("See `python -m benchmarks.retired_entry_point`.\n")
+    errs = check_docs.check_file(bad)
+    assert len(errs) == 1 and "retired_entry_point" in errs[0]
+
+
+def test_env_var_flags_and_uncited_docs_are_ignored(tmp_path):
+    ok = tmp_path / "ok.md"
+    ok.write_text("Set XLA_FLAGS=--xla_force_host_platform_device_count=8 "
+                  "before `python -m benchmarks.xsim_throughput --smoke`.\n")
+    assert check_docs.check_file(ok) == []
+    no_cli = tmp_path / "no_cli.md"
+    no_cli.write_text("A doc citing no local CLI may mention --whatever.\n")
+    assert check_docs.check_file(no_cli) == []

@@ -1,0 +1,149 @@
+"""runtime.fault schedules + runtime.elastic resize plans (host-side).
+
+The xsim engine consumes these as arrays (tests/test_xsim_faults.py);
+here the host-side data model itself is pinned: validation, sorting,
+slot padding/overflow, the resize→schedule mapping, and the heartbeat
+tracker's expiry/recovery ordering edges.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.runtime import fault
+from repro.runtime.elastic import resize_schedule
+from repro.runtime.fault import (FAULT_DRAIN, FAULT_FAIL, FAULT_GROW,
+                                 CapacityEvent, FaultSchedule,
+                                 HeartbeatTracker, StragglerPolicy)
+
+# ------------------------------------------------------- CapacityEvent
+
+
+def test_capacity_event_validation():
+    with pytest.raises(ValueError, match="finite"):
+        CapacityEvent(-1.0, 0.5, FAULT_FAIL)
+    with pytest.raises(ValueError, match="finite"):
+        CapacityEvent(np.inf, 0.5, FAULT_FAIL)
+    with pytest.raises(ValueError, match="> 0"):
+        CapacityEvent(10.0, 0.0, FAULT_FAIL)
+    with pytest.raises(ValueError, match="> 0"):
+        CapacityEvent(10.0, -0.2, FAULT_GROW)
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        CapacityEvent(10.0, 0.5, 7)
+    # a shrink can never exceed the whole machine; a grow can double it
+    with pytest.raises(ValueError, match="<= 1"):
+        fault.fail(10.0, 1.5)
+    with pytest.raises(ValueError, match="<= 1"):
+        fault.drain(10.0, 1.01)
+    assert fault.grow(10.0, 1.5).frac == 1.5
+
+
+def test_constructors_tag_kinds():
+    assert fault.fail(1.0, 0.5).kind == FAULT_FAIL
+    assert fault.drain(1.0, 0.5).kind == FAULT_DRAIN
+    assert fault.grow(1.0, 0.5).kind == FAULT_GROW
+
+
+# ------------------------------------------------------- FaultSchedule
+
+
+def test_schedule_sorts_by_time_and_len():
+    s = FaultSchedule((fault.grow(300.0, 0.5), fault.fail(100.0, 0.25),
+                       fault.drain(200.0, 0.25)))
+    assert len(s) == 3
+    assert [e.t for e in s.events] == [100.0, 200.0, 300.0]
+    assert [e.kind for e in s.events] == [FAULT_FAIL, FAULT_DRAIN,
+                                          FAULT_GROW]
+    assert len(FaultSchedule()) == 0
+
+
+def test_as_arrays_pads_rounds_and_overflows():
+    s = FaultSchedule((fault.fail(100.0, 0.25), fault.grow(200.0, 0.25)))
+    t, c, k = s.as_arrays(4, total_cores=670.0)
+    np.testing.assert_array_equal(t, [100.0, 200.0, np.inf, np.inf])
+    # deltas are round(frac · ORIGINAL total): integer-exact core counts
+    np.testing.assert_array_equal(c, [168.0, 168.0, 0.0, 0.0])
+    np.testing.assert_array_equal(k, [FAULT_FAIL, FAULT_GROW, 0, 0])
+    assert t.dtype == np.float32 and c.dtype == np.float32
+    assert k.dtype == np.int32
+    with pytest.raises(ValueError, match="fault events > 1 slots"):
+        s.as_arrays(1, total_cores=670.0)
+    # the empty schedule is all padding — the engine's no-op encoding
+    t0, c0, k0 = FaultSchedule().as_arrays(2, total_cores=64.0)
+    assert np.all(np.isinf(t0)) and np.all(c0 == 0) and np.all(k0 == 0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 6), st.floats(8.0, 4096.0))
+def test_as_arrays_roundtrip_property(seed, n, total):
+    """Random schedules: times come back sorted ascending with +inf
+    padding, deltas are integral and positive for every real slot."""
+    rng = np.random.default_rng(seed)
+    kinds = (fault.fail, fault.drain, fault.grow)
+    evs = tuple(kinds[int(rng.integers(0, 3))](
+        float(rng.uniform(0.0, 1e5)), float(rng.uniform(0.05, 1.0)))
+        for _ in range(n))
+    sched = FaultSchedule(evs)
+    t, c, k = sched.as_arrays(n + 2, total)
+    assert np.all(np.diff(t[:n]) >= 0.0)          # sorted
+    assert np.all(np.isinf(t[n:]))                # padded
+    assert np.all(c[:n] == np.round(c[:n]))       # integer-exact cores
+    assert np.all(c[:n] >= 0.0)
+    assert set(k[:n]) <= {FAULT_FAIL, FAULT_DRAIN, FAULT_GROW}
+
+
+# ------------------------------------------------------ resize_schedule
+
+
+def test_resize_schedule_maps_deltas():
+    s = resize_schedule([(100.0, -0.3), (200.0, +0.3)])
+    assert [e.kind for e in s.events] == [FAULT_DRAIN, FAULT_GROW]
+    assert [e.frac for e in s.events] == [0.3, 0.3]
+    p = resize_schedule([(100.0, -0.3), (200.0, +0.3)], preempt=True)
+    assert [e.kind for e in p.events] == [FAULT_FAIL, FAULT_GROW]
+    with pytest.raises(ValueError, match="zero-delta"):
+        resize_schedule([(100.0, 0.0)])
+
+
+# ------------------------------------- heartbeat expiry/recovery edges
+
+
+def test_heartbeat_recovery_and_refailure_ordering():
+    """A worker that misses its deadline, beats again, then goes silent
+    must be reported failed TWICE, in order — recovery re-arms the
+    failure edge instead of latching the worker dead."""
+    hb = HeartbeatTracker(timeout_s=60.0)
+    seen = []
+    hb.on_failure.append(seen.append)
+    hb.register(1, now=0.0)
+    hb.register(2, now=0.0)
+    hb.beat(2, now=50.0)
+    assert hb.sweep(now=61.0) == [1]              # 1 expired, 2 beat
+    assert hb.healthy_count() == 1
+    # a repeated sweep must NOT re-report the already-failed worker
+    assert hb.sweep(now=65.0) == []
+    hb.beat(1, now=70.0)                          # 1 recovers
+    assert hb.healthy_count() == 2
+    assert hb.sweep(now=90.0) == []
+    assert hb.sweep(now=200.0) == [1, 2]          # both silent again
+    assert seen == [1, 1, 2]
+    # a beat for an unregistered worker is a no-op, not a registration
+    hb.beat(99, now=0.0)
+    assert 99 not in hb.workers
+
+
+def test_heartbeat_beat_exactly_at_deadline_survives():
+    """The deadline is strict (> timeout): a beat landing exactly at
+    last + timeout keeps the worker healthy."""
+    hb = HeartbeatTracker(timeout_s=60.0)
+    hb.register(1, now=0.0)
+    assert hb.sweep(now=60.0) == []               # boundary: not yet late
+    assert hb.sweep(now=60.001) == [1]
+
+
+def test_straggler_policy_min_samples_and_floor():
+    p = StragglerPolicy(quantile=0.5, factor=2.0, min_samples=3,
+                        floor_s=10.0)
+    assert p.deadline([1.0, 2.0]) is None         # below min_samples
+    assert p.deadline([1.0, 1.0, 1.0]) == 10.0    # floor wins over 2·q
+    assert p.deadline([100.0, 100.0, 100.0]) == 200.0

@@ -22,8 +22,8 @@ from repro.core.losses import zero_one
 from repro.core.regret import empirical_regret, theorem1_bound
 from repro.sched.centers import CenterProfile
 from repro.sched.queue_sim import QueueSim
-from repro.sched.strategies import (ASAEstimator, run_asa, run_bigjob,
-                                    run_per_stage)
+from repro.sched.strategies import (ASAEstimator, pilot_waste_cs, run_asa,
+                                    run_bigjob, run_per_stage, run_pilot)
 from repro.sched.workflows import BLAST, MONTAGE, STATISTICS
 from repro.xsim import backfill, compare, events, policies
 from repro.xsim import state as X
@@ -126,6 +126,33 @@ def test_asa_matches_queue_sim(wf, seed, use_deps):
     # within-run learning really ran inside the scan: one tuned update
     # (2 estimator events) per settled stage start
     assert int(fin.est.t) >= 2 * len(wf.stages)
+
+
+@pytest.mark.parametrize("wf", [BLAST, STATISTICS])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_pilot_matches_queue_sim(wf, seed):
+    """Pilot-job differential: one peak-width allocation whose walltime
+    adds the pilot bootstrap + per-stage dispatch latency on top of the
+    serialized stage work. Both engines model the identical single-job
+    shape, so the match is exact (same machine snapshot, no divergence
+    sources) — the tolerance is the shared ``_close`` formality."""
+    sim, table, row = _mirrored(seed)   # snapshot BEFORE the ref run
+    free = compare.queue_sim_free_cores(sim)
+    ref = run_pilot(sim, wf, 8, "tiny")
+
+    policies.add_workflow(table, row, wf, 8, X.PILOT, t0=600.0)
+    st = freeze(table, total_cores=TINY.total_cores, free_cores=free,
+                now=600.0, policy=X.PILOT, t0=600.0,
+                pilot_waste_cs=pilot_waste_cs(wf, 8))
+    fin = events.simulate(st, n_steps=160)
+    m = compare.metrics(fin)
+    _close(float(m["twt_s"]), ref.twt_s)
+    _close(float(m["makespan_s"]), ref.makespan_s)
+    _close(float(m["core_hours"]), ref.core_hours)
+    # the over-allocation waste is charged as OH once the pilot runs
+    assert float(m["oh_hours"]) == pytest.approx(ref.oh_hours, rel=1e-5)
+    assert float(m["oh_hours"]) > 0.0
+    assert int(m["wf_done"]) == int(m["wf_total"]) == 1
 
 
 def test_naive_cancel_resubmit_exercised():
@@ -301,17 +328,21 @@ def test_pallas_freed_mode_end_to_end():
 
 # ------------------------------------------------- fleet sweep + ordering
 def test_vmapped_sweep_and_table1_ordering():
-    """One jitted vmapped program over the full grid (all four policies,
-    learning within each scan) reproduces the paper's qualitative Table-1
-    ordering:
+    """One jitted vmapped program over the full grid (all five queue
+    policies, learning within each scan) reproduces the paper's
+    qualitative Table-1 ordering:
       CH(asa) == CH(per_stage) < CH(bigjob),
       TWT(asa) best, makespan(asa) < makespan(per_stage),
-    and the §4.5 Naive/Dependency trade-off: ASA-Naive pays OH > 0 and
-    loses perceived waiting time to dependency-ASA."""
+    the §4.5 Naive/Dependency trade-off (ASA-Naive pays OH > 0 and loses
+    perceived waiting time to dependency-ASA), and the pilot-job
+    trade-off: a pilot queues ONCE at peak width (so its queue wait is
+    BigJob's, within reach of Per-Stage's summed stage waits) but pays
+    BigJob-like packing waste plus bootstrap/dispatch overhead —
+    CH(pilot) == CH(asa) + OH(pilot), mirroring ASA-Naive's identity."""
     cfg = XSimConfig(n_warm=24, n_backlog=16, n_arrivals=24, max_stages=9,
                      t0=3600.0)
     grid = make_grid(cfg, n_seeds=2, shrink=1 / 64.0,
-                     policy_ids=(0, 1, 2, 3))
+                     policy_ids=(0, 1, 2, 3, 5))
     fleet = policies.init_fleet(int(grid.geo_idx.max()) + 1)
     fleet = warm_fleet(fleet, grid, rounds=3)
     final, m = run_grid(grid, fleet, pred_seed=7)
@@ -343,6 +374,19 @@ def test_vmapped_sweep_and_table1_ordering():
     assert mean["asa_naive"]["twt_s"] > mean["asa"]["twt_s"]
     assert mean["asa_naive"]["core_hours"] == pytest.approx(
         mean["asa"]["core_hours"] + mean["asa_naive"]["oh_hours"], rel=1e-5)
+    # pilot queue wait: one peak-width submission at t0 — identical queue
+    # position to BigJob's (same width, same instant), and within a small
+    # slack of Per-Stage's summed narrow-stage waits
+    assert mean["bigjob"]["twt_s"] <= mean["pilot"]["twt_s"] + 1e-3
+    assert mean["pilot"]["twt_s"] <= 1.1 * mean["per_stage"]["twt_s"]
+    # ...but the pilot pays for it: bootstrap + dispatch stretch the
+    # makespan past BigJob's, the over-allocation is charged as OH, and
+    # the core-hours identity mirrors ASA-Naive's
+    assert mean["pilot"]["makespan_s"] > mean["bigjob"]["makespan_s"]
+    assert mean["pilot"]["oh_hours"] > 0.0
+    assert mean["pilot"]["core_hours"] == pytest.approx(
+        mean["asa"]["core_hours"] + mean["pilot"]["oh_hours"], rel=1e-5)
+    assert mean["pilot"]["core_hours"] > mean["bigjob"]["core_hours"]
     # the other strategies never accrue OH
     for strat in ("bigjob", "per_stage", "asa"):
         assert mean[strat]["oh_hours"] == 0.0

@@ -1,0 +1,322 @@
+"""Capacity faults in the xsim scan: fail/drain/grow semantics + the
+no-fault bit-identity contract.
+
+The robustness scenario families (xsim.families) are *data*: a
+``runtime.fault.FaultSchedule`` folded into the fixed-slot job table as
+per-scenario arrays. These tests pin
+
+* the three event semantics deterministically — FAIL kills the most
+  recently started running jobs (LIFO) to cover the capacity deficit,
+  requeues them with their original submit time (FCFS seniority kept)
+  and charges the lost core-seconds as restart overhead; DRAIN removes
+  free cores now and collects the remainder from completions
+  (``cap_debt``), disturbing no running job; GROW adds capacity that
+  admits previously-too-wide work;
+* the bit-identity contract — a dynamically empty schedule (all +inf
+  slots) and the statically fault-free program produce byte-identical
+  states, and the ``clean`` family grid is byte-identical to a plain
+  ``make_grid`` sweep;
+* invariants under random schedules (hypothesis) — core conservation
+  ``total − free == Σ running`` through every step, ``free ≥ 0``,
+  causality ``start ≥ submit``, and full drainage of every due event.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bins import make_bins
+from repro.runtime import fault
+from repro.runtime.fault import FaultSchedule
+from repro.sched.workflows import MONTAGE
+from repro.xsim import compare, events, policies
+from repro.xsim import state as X
+from repro.xsim.families import (FAMILIES, N_FAULT_SLOTS, family_grid,
+                                 family_schedule)
+from repro.xsim.grid import XSimConfig, make_grid, run_grid
+from repro.xsim.state import add_job, empty_table, freeze
+
+BINS = jnp.asarray(make_bins(53), jnp.float32)
+
+
+def assert_trees_equal(a, b):
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ------------------------------------------------- deterministic semantics
+
+
+def _two_running(total=8.0):
+    """Two 4-core jobs running since t=0 / t=50, nothing else."""
+    t = empty_table(8)
+    add_job(t, 0, cores=4, duration=1000.0, submit=0.0, status=X.RUNNING,
+            start=0.0, end=1000.0)
+    add_job(t, 1, cores=4, duration=1000.0, submit=0.0, status=X.RUNNING,
+            start=50.0, end=1050.0)
+    return t, dict(total_cores=total, free_cores=0.0)
+
+
+def test_fail_kills_lifo_requeues_and_charges_restart():
+    """Half the machine dies at t=100 with zero free cores: the LIFO rule
+    kills job 1 (started at 50, after job 0's 0), requeues it with its
+    original submit time, and charges the 4 cores × 50 s lost attempt."""
+    t, kw = _two_running()
+    # a later arrival competing for the post-fault machine: the requeued
+    # job must keep its FCFS seniority (submit 0 < 60) and start first
+    add_job(t, 2, cores=4, duration=1000.0, submit=60.0, status=X.PENDING)
+    s = freeze(t, **kw, fault_sched=FaultSchedule((fault.fail(100.0, 0.5),)))
+    fin = events.simulate(s, n_steps=40, faults=True)
+
+    assert int(fin.restarts) == 1
+    assert float(fin.restart_cs) == 200.0            # 4 cores × 50 s
+    assert float(fin.total) == 4.0                   # 8 − 4 dead
+    status = np.asarray(fin.status)
+    assert list(status[:3]) == [X.DONE, X.DONE, X.DONE]
+    start = np.asarray(fin.start)
+    assert float(start[0]) == 0.0                    # survivor undisturbed
+    assert float(fin.end[0]) == 1000.0
+    # requeue causality: the killed job restarts after the fault, and its
+    # kept submit time wins FCFS over the t=60 arrival
+    assert float(start[1]) == 1000.0 >= 100.0
+    assert float(start[2]) == 2000.0
+    # conservation at the end: nothing running, all capacity free
+    assert float(fin.free) == float(fin.total) == 4.0
+    m = compare.metrics(fin)
+    assert int(m["restarts"]) == 1
+    assert float(m["restart_hours"]) == pytest.approx(200.0 / 3600.0)
+    # the lost attempt is charged as overhead AND paid for in core-hours
+    assert float(m["oh_hours"]) == pytest.approx(200.0 / 3600.0)
+
+
+def test_drain_is_graceful_and_collects_debt_from_completions():
+    """Draining 6 of 8 cores with one 4-core job running: 4 free cores
+    leave now, the owed 2 are collected when the job completes — the job
+    itself is never disturbed (no kills, end time unchanged)."""
+    t = empty_table(4)
+    add_job(t, 0, cores=4, duration=500.0, submit=0.0, status=X.RUNNING,
+            start=0.0, end=500.0)
+    s = freeze(t, total_cores=8.0, free_cores=4.0,
+               fault_sched=FaultSchedule((fault.drain(100.0, 0.75),)))
+    fin = events.simulate(s, n_steps=20, faults=True)
+
+    assert int(fin.restarts) == 0
+    assert float(fin.end[0]) == 500.0                # undisturbed
+    assert int(fin.status[0]) == X.DONE
+    assert float(fin.cap_debt) == 0.0                # debt fully collected
+    assert float(fin.total) == 2.0                   # 8 − 6 drained
+    assert float(fin.free) == 2.0
+
+
+def test_drain_clamps_to_machine_present():
+    """A drain of 100% against a machine that is mostly busy removes what
+    is free, owes the running remainder, and lands at total == 0."""
+    t = empty_table(4)
+    add_job(t, 0, cores=4, duration=500.0, submit=0.0, status=X.RUNNING,
+            start=0.0, end=500.0)
+    s = freeze(t, total_cores=8.0, free_cores=4.0,
+               fault_sched=FaultSchedule((fault.drain(100.0, 1.0),)))
+    fin = events.simulate(s, n_steps=20, faults=True)
+    assert int(fin.status[0]) == X.DONE              # work still finished
+    assert float(fin.total) == 0.0
+    assert float(fin.free) == 0.0
+    assert float(fin.cap_debt) == 0.0
+
+
+def test_grow_admits_previously_too_wide_job():
+    """A 12-core job cannot start on the 8-core machine; the t=100 grow
+    to 12 cores admits it at exactly the grow instant."""
+    t = empty_table(4)
+    add_job(t, 0, cores=12, duration=200.0, submit=0.0, status=X.PENDING)
+    s = freeze(t, total_cores=8.0, free_cores=8.0,
+               fault_sched=FaultSchedule((fault.grow(100.0, 0.5),)))
+    fin = events.simulate(s, n_steps=20, faults=True)
+    assert float(fin.start[0]) == 100.0
+    assert int(fin.status[0]) == X.DONE
+    assert float(fin.total) == 12.0
+    assert float(fin.free) == 12.0
+
+
+def test_free_cores_absorb_failure_before_kills():
+    """A failure smaller than the free pool kills nothing."""
+    t = empty_table(4)
+    add_job(t, 0, cores=4, duration=1000.0, submit=0.0, status=X.RUNNING,
+            start=0.0, end=1000.0)
+    s = freeze(t, total_cores=16.0, free_cores=12.0,
+               fault_sched=FaultSchedule((fault.fail(100.0, 0.5),)))
+    fin = events.simulate(s, n_steps=20, faults=True)
+    assert int(fin.restarts) == 0
+    assert float(fin.restart_cs) == 0.0
+    assert float(fin.total) == 8.0
+    assert float(fin.end[0]) == 1000.0
+
+
+# ------------------------------------------------- bit-identity contracts
+
+
+def _workflow_scenario():
+    t = empty_table(16)
+    policies.add_workflow(t, 0, MONTAGE, 28, X.PER_STAGE, t0=0.0)
+    return t
+
+
+def test_dynamically_empty_schedule_is_bitwise_identical():
+    """freeze(n_faults=2) with an EMPTY schedule (all-+inf slots) through
+    the faults=True program == the statically fault-free program, bit for
+    bit on every shared leaf (the (a+b)−0.0 debt-payment identity)."""
+    t = _workflow_scenario()
+    kw = dict(policy=X.PER_STAGE, total_cores=100.0, free_cores=100.0)
+    a = events.simulate(freeze(t, **kw), n_steps=48)
+    b = events.simulate(
+        freeze(t, **kw, fault_sched=FaultSchedule(), n_faults=2),
+        n_steps=48, faults=True)
+    assert b.fault_t.shape == (2,) and bool(jnp.all(jnp.isinf(b.fault_t)))
+    assert_trees_equal(a, b._replace(fault_t=a.fault_t, fault_c=a.fault_c,
+                                     fault_k=a.fault_k))
+    ma, mb = compare.metrics(a), compare.metrics(b)
+    assert_trees_equal(ma, mb)
+
+
+def test_faults_false_statically_ignores_attached_schedule():
+    """``faults=False`` elides the machinery even when real events are
+    attached: the arrays are dead weight, the program is the pre-fault
+    one (the static-elision contract, mirroring trace=None)."""
+    t = _workflow_scenario()
+    kw = dict(policy=X.PER_STAGE, total_cores=100.0, free_cores=100.0)
+    a = events.simulate(freeze(t, **kw), n_steps=48)
+    sched = FaultSchedule((fault.fail(500.0, 0.5),))
+    b = events.simulate(freeze(t, **kw, fault_sched=sched),
+                        n_steps=48)                    # faults NOT enabled
+    assert int(b.fault_next) == 0                      # never consumed
+    assert_trees_equal(a, b._replace(fault_t=a.fault_t, fault_c=a.fault_c,
+                                     fault_k=a.fault_k))
+
+
+_CFG = XSimConfig(n_warm=8, n_backlog=6, n_arrivals=8, max_stages=9,
+                  t0=1800.0)
+_GRID_KW = dict(n_seeds=1, shrink=1 / 64.0, workflows=("statistics",),
+                policy_ids=(0, 1, 2))
+
+
+def test_clean_family_grid_is_bitwise_identical_to_plain_grid():
+    g0 = make_grid(_CFG, **_GRID_KW)
+    g1 = family_grid(_CFG, "clean", **_GRID_KW)
+    assert not g1.has_faults
+    f0, m0 = run_grid(g0)
+    f1, m1 = run_grid(g1)
+    assert_trees_equal(f0, f1)
+    assert_trees_equal(m0, m1)
+
+
+# --------------------------------------------------- family grids end2end
+
+
+@pytest.mark.parametrize("family", ["faulty", "elastic", "preempt"])
+def test_family_grids_complete_and_conserve(family):
+    grid = family_grid(_CFG, family, **_GRID_KW)
+    assert grid.has_faults
+    assert grid.fault_t.shape[1] == N_FAULT_SLOTS[family]
+    final, m = run_grid(grid)
+    # every workflow still finishes inside the (fault-aware) step budget
+    assert np.all(np.asarray(m["wf_done"]) == np.asarray(m["wf_total"]))
+    # every due event was consumed and the queue fully drained
+    n_real = np.sum(np.isfinite(np.asarray(grid.fault_t)), axis=1)
+    np.testing.assert_array_equal(np.asarray(final.fault_next), n_real)
+    nxt = np.asarray(jax.jit(jax.vmap(
+        lambda s: events.next_event_time(s, faults=True)))(final))
+    assert np.all(np.isinf(nxt))
+    # conservation + capacity sanity at the end of the sweep
+    running = np.asarray(final.status) == X.RUNNING
+    used = np.sum(np.where(running, np.asarray(final.cores), 0.0), axis=1)
+    np.testing.assert_allclose(used + np.asarray(final.free),
+                               np.asarray(final.total), atol=1e-3)
+    assert float(jnp.min(final.min_free)) >= -1e-3
+    assert np.all(np.asarray(m["restart_hours"]) >= 0.0)
+    if family == "faulty":
+        # fail then same-sized recovery: capacity returns to the original
+        np.testing.assert_allclose(np.asarray(final.total),
+                                   np.asarray(grid.centers.total_cores),
+                                   atol=1e-3)
+
+
+def test_family_schedules_vary_by_seed():
+    a = family_schedule("faulty", {"seed": 0}, t0=0.0)
+    b = family_schedule("faulty", {"seed": 1}, t0=0.0)
+    assert a.events[0].t != b.events[0].t
+    assert family_schedule("clean", {"seed": 0}, t0=0.0) is None
+    for fam in FAMILIES:
+        sched = family_schedule(fam, {"seed": 2}, t0=0.0)
+        assert len(sched or ()) <= N_FAULT_SLOTS[fam]
+    with pytest.raises(ValueError, match="unknown family"):
+        family_schedule("bogus", {}, t0=0.0)
+
+
+# --------------------------------------------------- property invariants
+
+_MAX_JOBS = 16
+_TOTAL = 64.0
+_KINDS = (fault.fail, fault.drain, fault.grow)
+
+
+def _faulted_scenario(seed: int, fill: float, n_events: int):
+    rng = np.random.default_rng(seed)
+    t = empty_table(_MAX_JOBS)
+    row, used = 0, 0.0
+    for _ in range(int(rng.integers(0, 6))):
+        c = float(rng.integers(1, 24))
+        if used + c > fill * _TOTAL:
+            break
+        d = float(rng.uniform(50.0, 5000.0))
+        add_job(t, row, cores=c, duration=d, submit=0.0, status=X.RUNNING,
+                start=0.0, end=float(rng.uniform(1.0, d)))
+        used += c
+        row += 1
+    for _ in range(int(rng.integers(1, 6))):
+        add_job(t, row, cores=float(rng.integers(1, 32)),
+                duration=float(rng.uniform(50.0, 4000.0)),
+                submit=float(rng.uniform(0.0, 3000.0)), status=X.PENDING)
+        row += 1
+    events_ = tuple(
+        _KINDS[int(rng.integers(0, 3))](float(rng.uniform(1.0, 6000.0)),
+                                        float(rng.uniform(0.1, 0.6)))
+        for _ in range(n_events))
+    return freeze(t, total_cores=_TOTAL, free_cores=_TOTAL - used,
+                  fault_sched=FaultSchedule(events_))
+
+
+_step_f = jax.jit(lambda s: events.sim_step(s, BINS, faults=True))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.floats(0.1, 0.9), st.integers(1, 4))
+def test_invariants_hold_under_random_fault_schedules(seed, fill, n_events):
+    s = _faulted_scenario(seed, fill, n_events)
+    for _ in range(80):
+        s = _step_f(s)
+        status = np.asarray(s.status)
+        cores = np.asarray(s.cores)
+        # conservation + machine never oversubscribed nor negative
+        used = float(np.sum(np.where(status == X.RUNNING, cores, 0.0)))
+        assert used + float(s.free) == pytest.approx(float(s.total),
+                                                     abs=1e-3)
+        assert float(s.free) >= -1e-3
+        assert float(s.total) >= -1e-3
+        assert float(s.cap_debt) >= -1e-3
+        # causality: every started job started at/after its submission
+        start = np.asarray(s.start)
+        started = np.isfinite(start)
+        assert np.all(start[started] >= np.asarray(s.submit)[started] - 1e-3)
+    # all due capacity events were consumed by the end of the run
+    assert float(events.next_event_time(s, faults=True)) == np.inf
+    assert int(s.fault_next) == n_events
+    # restart accounting only ever accrues, consistently
+    assert int(s.restarts) >= 0
+    assert float(s.restart_cs) >= 0.0
+    if int(s.restarts) == 0:
+        assert float(s.restart_cs) == 0.0

@@ -189,6 +189,30 @@ def test_sharded_batched_metrics_matches_to_reduction_order():
 
 
 @pytest.mark.parametrize("k", [1, 2, 4, 8])
+def test_fault_family_sweep_bit_identical_across_shards(k):
+    """Capacity faults under shard_map: a faulty-family sweep (fail +
+    recovery folded into the scan) must gather bit-identically to the
+    single-device vmap for every shard count — the fault cursor,
+    drain-debt and restart accounting are per-scenario state and must
+    not observe the device topology."""
+    if N_DEV < k:
+        pytest.skip(f"needs {k} devices, have {N_DEV} (set XLA_FLAGS="
+                    "--xla_force_host_platform_device_count=8)")
+    from repro.xsim.families import family_grid
+
+    cfg = tiny_cfg(pred_mode="sample")
+    grid = family_grid(cfg, "faulty", center_names=("hpc2n",),
+                       workflows=("blast",), n_seeds=1, shrink=1 / 64.0,
+                       policy_ids=(BIGJOB, PER_STAGE, ASA, ASA_NAIVE))
+    assert grid.has_faults
+    fleet = policies.init_fleet(int(grid.geo_idx.max()) + 1)
+    f0, m0 = run_grid(grid, fleet, pred_seed=3)
+    fk, mk = run_grid(grid, fleet, pred_seed=3, n_shards=k)
+    assert_trees_equal(f0, fk)                # incl. fault cursors/debt
+    assert_trees_equal(m0, mk)
+
+
+@pytest.mark.parametrize("k", [1, 2, 4, 8])
 def test_traced_sweep_bit_identical_across_shards(k):
     """Observability under shard_map: a traced sharded sweep must (a)
     leave every non-trace leaf bit-identical to the UNTRACED vmap run
