@@ -25,8 +25,13 @@ much), so both serve gates add signal. Batching health is gated too:
 ceilings (``*_max``) the baseline carries. The serving bench must also
 upload its ``serve_metrics`` registry-snapshot record
 (``--metrics-json``) — a missing serve_metrics leg fails the gate.
-Pass ``--no-serve`` to skip serve gating when replaying old
-throughput-only artifact sets.
+``serve_chaos*.json`` (benchmarks/serve_chaos.py, the fault-injection
+soak) is gated against ``benchmarks/baselines/serve_chaos.json``:
+``hung_futures`` must not exceed the absolute ceiling (committed as 0 —
+the zero-hung-futures invariant), ``recovery_p99_ms`` (fault → next
+successful resolve) stays under baseline ÷ (1 − tolerance), and
+``shed_rate`` under the absolute ``shed_rate_max``.  Pass ``--no-serve``
+to skip serve gating when replaying old throughput-only artifact sets.
 
 Legs are schema-v1 ``repro.obs.telemetry`` records (the only format the
 runners emit since the observability PR): the gated numbers live in the
@@ -69,6 +74,8 @@ BASELINE_DEFAULT = Path(__file__).resolve().parent / "baselines" \
     / "xsim_throughput.json"
 SERVE_BASELINE_DEFAULT = Path(__file__).resolve().parent / "baselines" \
     / "serve_latency.json"
+CHAOS_BASELINE_DEFAULT = Path(__file__).resolve().parent / "baselines" \
+    / "serve_chaos.json"
 
 
 def leg_key(leg: dict) -> str:
@@ -192,6 +199,104 @@ def collect_serve_metrics_legs(bench_dir: Path) -> tuple[dict[str, dict],
             else f"serve-metrics-shards{shards}"
         legs[key] = leg
     return legs, failures
+
+
+def collect_serve_chaos_legs(bench_dir: Path) -> tuple[dict[str, dict],
+                                                       list[str]]:
+    """(legs, failures) for serve_chaos*.json — the chaos soak record
+    (benchmarks/serve_chaos.py --json).  One leg keyed ``serve-chaos``;
+    schema violations are named failures."""
+    legs: dict[str, dict] = {}
+    failures: list[str] = []
+    for path in sorted(bench_dir.rglob("serve_chaos*.json")):
+        try:
+            rec = json.loads(path.read_text())
+        except (OSError, json.JSONDecodeError) as e:
+            failures.append(f"serve_chaos file {path} is unreadable: {e}")
+            continue
+        try:
+            leg = telemetry.serve_chaos_leg(rec)
+        except ValueError as e:
+            run = rec.get("run", {}) if isinstance(rec, dict) else {}
+            label = run.get("label") or path.name
+            failures.append(f"serve_chaos leg ({label}, {path}) failed "
+                            f"telemetry validation: {e}")
+            continue
+        legs["serve-chaos"] = leg
+    return legs, failures
+
+
+def gate_serve_chaos(legs: dict[str, dict], baseline: dict,
+                     tolerance: float) -> tuple[dict, list[str]]:
+    """Chaos-soak gate — the three robustness invariants:
+
+    * ``hung_futures`` must be exactly the absolute baseline ceiling's
+      worth — which the committed baseline pins at **0** (no tolerance
+      scaling: one future that never resolves is a correctness bug, not
+      a perf regression);
+    * ``recovery_p99_ms`` (fault injection → next successful resolve)
+      stays under the ceiling baseline ÷ (1 − tolerance) — this covers
+      the crash → supervised-restore-and-restart tail;
+    * ``shed_rate`` stays under the **absolute** ``shed_rate_max``
+      ceiling (a ratio, like the batching-health caps in
+      :func:`gate_serve` — ratio-scaling a ratio gates nothing).
+
+    Missing legs / baseline-gated metrics are failures, as everywhere."""
+    failures: list[str] = []
+    checks: dict[str, dict] = {}
+    for key, base in baseline["legs"].items():
+        rec = legs.get(key)
+        if rec is None:
+            failures.append(f"gated chaos leg {key!r} missing from the "
+                            f"merged bench set (have: {sorted(legs)})")
+            continue
+        checks[key] = {"ok": True}
+        if "recovery_p99_ms" in base:
+            if "recovery_p99_ms" not in rec:
+                failures.append(f"{key}: record carries no "
+                                "recovery_p99_ms but the baseline "
+                                "gates it")
+                checks[key]["ok"] = False
+            else:
+                ceil = base["recovery_p99_ms"] / (1.0 - tolerance)
+                val = float(rec["recovery_p99_ms"])
+                ok = val <= ceil
+                checks[key].update(recovery_p99_ms=val,
+                                   recovery_baseline=base["recovery_p99_ms"],
+                                   recovery_ceiling=ceil, recovery_ok=ok)
+                checks[key]["ok"] &= ok
+                if not ok:
+                    failures.append(
+                        f"{key}: fault-recovery p99 {val:.0f} ms is above "
+                        f"the ceiling {ceil:.0f} (baseline "
+                        f"{base['recovery_p99_ms']:.0f} ÷ (1 − "
+                        f"{tolerance:.0%})) — restarts or containment "
+                        f"are digging out too slowly")
+        for metric, cap_key in (("hung_futures", "hung_futures_max"),
+                                ("shed_rate", "shed_rate_max")):
+            if cap_key not in base:
+                continue
+            if metric not in rec:
+                failures.append(f"{key}: record carries no {metric} but "
+                                f"the baseline gates it")
+                checks[key]["ok"] = False
+                continue
+            cap = float(base[cap_key])
+            val = float(rec[metric])
+            ok = val <= cap
+            checks[key].update(**{metric: val, cap_key: cap,
+                                  f"{metric}_ok": ok})
+            checks[key]["ok"] &= ok
+            if not ok:
+                msg = (f"{key}: {metric} {val:.3f} is above the absolute "
+                       f"ceiling {cap:.3f}")
+                if metric == "hung_futures":
+                    msg += (" — a submitted future never resolved under "
+                            "chaos; this is the zero-hung-futures "
+                            "invariant, not a perf floor")
+                failures.append(msg)
+    return {"tolerance": tolerance, "checks": checks,
+            "ok": not failures}, failures
 
 
 def gate_serve(legs: dict[str, dict], baseline: dict,
@@ -346,9 +451,13 @@ def main() -> int:
                     default=SERVE_BASELINE_DEFAULT,
                     help="committed serving baseline (default: "
                          "benchmarks/baselines/serve_latency.json)")
+    ap.add_argument("--chaos-baseline", type=Path,
+                    default=CHAOS_BASELINE_DEFAULT,
+                    help="committed chaos-soak baseline (default: "
+                         "benchmarks/baselines/serve_chaos.json)")
     ap.add_argument("--no-serve", action="store_true",
-                    help="skip the serve_latency gate (replaying "
-                         "throughput-only artifact sets)")
+                    help="skip the serve_latency and serve_chaos gates "
+                         "(replaying throughput-only artifact sets)")
     ap.add_argument("--out", type=Path, default=Path("BENCH_xsim.json"),
                     help="merged bench-trajectory artifact to write")
     ap.add_argument("--tolerance", type=float, default=0.25,
@@ -367,8 +476,11 @@ def main() -> int:
 
     serve_legs: dict[str, dict] = {}
     serve_metrics_legs: dict[str, dict] = {}
+    serve_chaos_legs: dict[str, dict] = {}
     serve_baseline = None
     serve_gate_rec = None
+    chaos_baseline = None
+    chaos_gate_rec = None
     if not args.no_serve:
         serve_baseline = json.loads(args.serve_baseline.read_text())
         serve_legs, serve_schema_failures = collect_serve_legs(
@@ -388,13 +500,25 @@ def main() -> int:
             + serve_failures
         failures += serve_failures
         serve_gate_rec["ok"] = not serve_failures
+
+        chaos_baseline = json.loads(args.chaos_baseline.read_text())
+        serve_chaos_legs, chaos_schema_failures = \
+            collect_serve_chaos_legs(args.bench_dir)
+        chaos_gate_rec, chaos_failures = gate_serve_chaos(
+            serve_chaos_legs, chaos_baseline, args.tolerance)
+        chaos_failures = chaos_schema_failures + chaos_failures
+        failures += chaos_failures
+        chaos_gate_rec["ok"] = not chaos_failures
     gate_rec["ok"] = not failures
 
     merged = {"legs": legs, "baseline": baseline, "gate": gate_rec,
               "serve_legs": serve_legs,
               "serve_metrics_legs": serve_metrics_legs,
               "serve_baseline": serve_baseline,
-              "serve_gate": serve_gate_rec}
+              "serve_gate": serve_gate_rec,
+              "serve_chaos_legs": serve_chaos_legs,
+              "serve_chaos_baseline": chaos_baseline,
+              "serve_chaos_gate": chaos_gate_rec}
     args.out.parent.mkdir(parents=True, exist_ok=True)
     args.out.write_text(json.dumps(merged, indent=2))
 
@@ -450,6 +574,19 @@ def main() -> int:
               f"(requests={rec.get('asa_serve_requests_total')}, "
               f"deferrals={rec.get('asa_serve_deferrals_total')}, "
               f"evictions={rec.get('asa_serve_evictions_total')})")
+    for key in sorted(serve_chaos_legs):
+        rec = serve_chaos_legs[key]
+        faults = rec.get("faults_fired") or {}
+        print(f"bench_gate/{key}: recovery p99 "
+              f"{rec.get('recovery_p99_ms', 0):.0f} ms, "
+              f"hung={rec.get('hung_futures')}, "
+              f"shed_rate={rec.get('shed_rate', 0):.3f}, "
+              f"restarts={rec.get('restarts')}, "
+              f"faults={sum(faults.values())} "
+              f"(crashes={rec.get('asa_serve_crashes_total')}, "
+              f"step_errors={rec.get('asa_serve_step_errors_total')}, "
+              f"lease_evictions="
+              f"{rec.get('asa_serve_lease_evictions_total')})")
     if failures:
         for f in failures:
             print(f"bench_gate: FAIL {f}", file=sys.stderr)

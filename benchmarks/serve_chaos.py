@@ -1,0 +1,317 @@
+"""Chaos soak for the ASA serving loop: injected faults at open-loop rate.
+
+Runs a :class:`repro.serve.loop.ServeSupervisor` under a deterministic
+seeded fault mix (``repro.serve.chaos``) while a paced open-loop
+producer streams synthetic tenant traffic at it, then gates the two
+robustness invariants the ISSUE pins:
+
+* **zero hung futures** — every submitted future (paced traffic AND the
+  chaos injector's own queue bursts) must be resolved by soak end, with
+  a Decision or a *typed* error; one unresolved future fails the run
+  (exit 1), no tolerance;
+* **recovery time** — for every injected fault, the wall seconds until
+  the *next successful resolve* after it; the p99 over all faults is
+  the gated headline (``profile.recovery_p99_ms``) — it covers step-
+  exception containment (sub-batch), checkpoint-failure containment
+  (~0), and the crash → supervised-restore-and-restart path (the tail).
+
+Shedding is reported, not zero-gated: the soak *wants* pressure
+(``--max-queue`` bounds ingress, a slice of requests carries deadlines,
+bursts overshoot), so ``profile.shed_rate`` = shed / submitted is gated
+against an absolute ceiling in ``benchmarks/baselines/serve_chaos.json``
+— runaway shedding means the loop stopped digging out.
+
+The traffic is synthetic (seeded tenant/wait draws, not the xsim
+loadgen): chaos gating needs deterministic *fault* placement, not a
+realistic wait mix, and the soak must fit the CI job's ≤ 2 min budget
+including jit warmup.  Tenants deliberately outnumber table slots when
+``--ttl`` is set, so the pool-lease LRU eviction path runs hot the whole
+soak.
+
+Emits one telemetry record, kind ``serve_chaos`` (schema v1), which
+``benchmarks.bench_gate`` consumes:
+
+  python -m benchmarks.serve_chaos --smoke --json bench/serve_chaos.json
+  python -m benchmarks.serve_chaos --requests 20000 --rate 4000 \
+      --chaos step=5,slow=2,ckpt=3,crash=2,burst=4 --max-queue 8192
+"""
+
+from __future__ import annotations
+
+import argparse
+import bisect
+import json
+import sys
+import tempfile
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.obs import telemetry
+from repro.serve import chaos as schaos
+from repro.serve.loop import ServeConfig, ServeSupervisor
+
+
+def parse_chaos_spec(spec: str, horizon: int, seed: int, *,
+                     burst_size: int, slow_s: float) -> schaos.ChaosSchedule:
+    """``step=3,slow=1,ckpt=2,crash=1,burst=2`` → a seeded
+    :func:`repro.serve.chaos.mix_schedule` over ``horizon`` batches
+    (``off`` → empty schedule)."""
+    if spec == "off":
+        return schaos.ChaosSchedule(())
+    counts = {"step": 3, "slow": 1, "ckpt": 2, "crash": 1, "burst": 2}
+    for part in spec.split(","):
+        k, _, v = part.partition("=")
+        if k not in counts or not v.isdigit():
+            raise SystemExit(
+                f"serve_chaos: bad --chaos entry {part!r} "
+                f"(want k=v with k in {sorted(counts)}, or 'off')")
+        counts[k] = int(v)
+    return schaos.mix_schedule(
+        horizon, seed, step_exceptions=counts["step"],
+        slow_steps=counts["slow"], checkpoint_errors=counts["ckpt"],
+        crashes=counts["crash"], bursts=counts["burst"],
+        burst_size=burst_size, slow_s=slow_s)
+
+
+def run_soak(args) -> dict:
+    schedule = parse_chaos_spec(args.chaos, args.horizon, args.seed,
+                                burst_size=args.burst_size,
+                                slow_s=args.slow_s)
+    injector = schaos.ChaosInjector(schedule, seed=args.seed)
+    cfg = ServeConfig(
+        n_slots=args.slots, batch_size=args.batch_size,
+        checkpoint_dir=args.ckpt_dir, checkpoint_every=args.ckpt_every,
+        seed=args.seed, max_queue=args.max_queue,
+        tenant_ttl_s=args.ttl)
+    sup = ServeSupervisor(cfg, chaos=injector,
+                          max_restarts=args.max_restarts)
+    rng = np.random.default_rng(args.seed)
+
+    # success-resolve wall times, appended from resolver threads
+    # (list.append is GIL-atomic); recovery is derived after the run
+    ok_times: list[float] = []
+
+    def stamp(fut) -> None:
+        if fut.exception() is None:
+            ok_times.append(time.monotonic())
+
+    futures = []
+    sup.start()
+    try:
+        # jit warmup outside the timed window (compile wall is not a
+        # recovery time)
+        sup.submit(0).result(timeout=300)
+        t_start = time.monotonic()
+        gap = 1.0 / args.rate if args.rate > 0 else 0.0
+        next_due = t_start
+        for i in range(args.requests):
+            tenant = int(rng.integers(args.tenants))
+            wait = float(rng.uniform(10.0, 4000.0)) \
+                if rng.random() < 0.5 else None
+            deadline = args.deadline_s \
+                if args.deadline_s > 0 and i % 5 == 0 else None
+            fut = sup.submit(tenant, wait, deadline_s=deadline)
+            fut.add_done_callback(stamp)
+            futures.append(fut)
+            if gap:
+                next_due += gap
+                delay = next_due - time.monotonic()
+                if delay > 0:
+                    time.sleep(delay)
+        # flush: the schedule is keyed on dispatched batches, so keep a
+        # trickle of traffic flowing until every scheduled fault has
+        # fired (bounded — leftover faults fail the run below)
+        flush_deadline = time.monotonic() + args.flush_timeout
+        while injector.pending and time.monotonic() < flush_deadline:
+            for _ in range(args.batch_size):
+                tenant = int(rng.integers(args.tenants))
+                wait = float(rng.uniform(10.0, 4000.0)) \
+                    if rng.random() < 0.5 else None
+                fut = sup.submit(tenant, wait)
+                fut.add_done_callback(stamp)
+                futures.append(fut)
+            time.sleep(0.02)
+        # let the loop dig out; every future must settle one way or
+        # the other well inside this window
+        drain_deadline = time.monotonic() + args.drain_timeout
+        for fut in futures:
+            remaining = drain_deadline - time.monotonic()
+            if remaining <= 0:
+                break
+            try:
+                fut.exception(timeout=remaining)
+            except TimeoutError:
+                break
+        t_end = time.monotonic()
+    finally:
+        sup.stop()
+
+    all_futures = futures + list(injector.burst_futures)
+    hung = [f for f in all_futures if not f.done()]
+    untyped = [f for f in all_futures
+               if f.done() and f.exception() is not None
+               and not isinstance(f.exception(), RuntimeError)]
+
+    # recovery: per fired fault, wall seconds to the next successful
+    # resolve; faults the run never recovered from charge to soak end
+    ok_sorted = sorted(ok_times)
+    recoveries_ms: list[float] = []
+    recovery_by_kind: dict[str, list[float]] = {}
+    unrecovered = 0
+    for _batch, ev, t_f in injector.fired:
+        i = bisect.bisect_right(ok_sorted, t_f)
+        if i < len(ok_sorted):
+            dt_ms = (ok_sorted[i] - t_f) * 1e3
+        else:
+            dt_ms = (t_end - t_f) * 1e3
+            unrecovered += 1
+        recoveries_ms.append(dt_ms)
+        recovery_by_kind.setdefault(ev.kind, []).append(dt_ms)
+
+    snap = sup.obs.registry.snapshot()
+    submitted = int(snap.get("asa_serve_requests_total", 0))
+    shed = int(snap.get("asa_serve_shed_total", 0))
+    rec_arr = np.asarray(recoveries_ms) if recoveries_ms \
+        else np.zeros(1)
+    profile = {
+        "recovery_p50_ms": float(np.percentile(rec_arr, 50)),
+        "recovery_p99_ms": float(np.percentile(rec_arr, 99)),
+        "recovery_max_ms": float(rec_arr.max()),
+        "recovery_by_kind_ms": {
+            k: round(float(np.max(v)), 3)
+            for k, v in sorted(recovery_by_kind.items())},
+        "hung_futures": len(hung),
+        "untyped_errors": len(untyped),
+        "unrecovered_faults": unrecovered,
+        "shed_rate": shed / submitted if submitted else 0.0,
+        "faults_fired": injector.counts(),
+        "faults_pending": len(injector.pending),
+        "restarts": sup.restarts,
+        "duration_s": t_end - t_start,
+        "n_requests": len(futures),
+        "resolved": int(snap.get("asa_serve_resolved_total", 0)),
+        "failed_typed": int(snap.get("asa_serve_failed_total", 0)),
+    }
+    run = {
+        "label": args.label,
+        "seed": args.seed,
+        "n_tenants": args.tenants,
+        "n_slots": args.slots,
+        "batch_size": args.batch_size,
+        "max_queue": args.max_queue,
+        "tenant_ttl_s": args.ttl,
+        "rate": args.rate,
+        "chaos": args.chaos,
+        "duration_s": t_end - t_start,
+    }
+    return telemetry.record("serve_chaos", run=run, profile=profile,
+                            metrics=snap, trace=None)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized soak (~4k requests, fits ≤2 min "
+                         "with jit warmup)")
+    ap.add_argument("--requests", type=int, default=12000,
+                    help="paced requests to submit (smoke: 4000)")
+    ap.add_argument("--rate", type=float, default=3000.0,
+                    help="open-loop submit rate, req/s (0 = unpaced)")
+    ap.add_argument("--tenants", type=int, default=96,
+                    help="tenant id space (> slots when --ttl is set, "
+                         "so LRU eviction runs hot)")
+    ap.add_argument("--slots", type=int, default=64,
+                    help="tenant-table capacity")
+    ap.add_argument("--batch-size", type=int, default=64)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="seeds traffic, fault placement and bursts")
+    ap.add_argument("--chaos", default="step=3,slow=1,ckpt=2,crash=1,burst=2",
+                    help="fault mix: step/slow/ckpt/crash/burst counts, "
+                         "or 'off'")
+    ap.add_argument("--horizon", type=int, default=24,
+                    help="batch window the fault schedule is placed in "
+                         "(the flush phase drives the loop through it)")
+    ap.add_argument("--flush-timeout", type=float, default=60.0,
+                    help="post-traffic wall budget for the trickle that "
+                         "drives remaining scheduled faults to fire")
+    ap.add_argument("--max-queue", type=int, default=4096,
+                    help="bounded ingress: overflow sheds with "
+                         "QueueFullError")
+    ap.add_argument("--ttl", type=float, default=2.0,
+                    help="tenant slot-lease TTL seconds (0 = no leases: "
+                         "full table raises TableFullError)")
+    ap.add_argument("--deadline-s", type=float, default=5.0,
+                    help="every 5th request carries this relative "
+                         "deadline (0 = none)")
+    ap.add_argument("--burst-size", type=int, default=64,
+                    help="requests per injected queue burst")
+    ap.add_argument("--slow-s", type=float, default=0.05,
+                    help="injected slow-device-step stall seconds")
+    ap.add_argument("--ckpt-every", type=int, default=4,
+                    help="checkpoint cadence in batches")
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="checkpoint directory (default: a tempdir)")
+    ap.add_argument("--max-restarts", type=int, default=10)
+    ap.add_argument("--drain-timeout", type=float, default=120.0,
+                    help="post-traffic wall budget for every future to "
+                         "settle before it counts as hung")
+    ap.add_argument("--label", default="chaos")
+    ap.add_argument("--json", type=Path, default=None,
+                    help="write the serve_chaos telemetry record here")
+    args = ap.parse_args()
+    if args.smoke:
+        args.requests = min(args.requests, 4000)
+        args.label = "chaos-smoke"
+    if args.ttl == 0:
+        args.ttl = None
+
+    tmp = None
+    if args.ckpt_dir is None:
+        tmp = tempfile.TemporaryDirectory(prefix="serve_chaos_ckpt_")
+        args.ckpt_dir = tmp.name
+    try:
+        rec = run_soak(args)
+    finally:
+        if tmp is not None:
+            tmp.cleanup()
+
+    prof = rec["profile"]
+    print(f"serve_chaos/{args.label}: "
+          f"recovery p50={prof['recovery_p50_ms']:.1f}ms "
+          f"p99={prof['recovery_p99_ms']:.1f}ms "
+          f"max={prof['recovery_max_ms']:.1f}ms, "
+          f"shed_rate={prof['shed_rate']:.3f}, "
+          f"restarts={prof['restarts']}, "
+          f"faults={sum(prof['faults_fired'].values())} "
+          f"({prof['faults_pending']} pending), "
+          f"hung={prof['hung_futures']} "
+          f"untyped={prof['untyped_errors']} "
+          f"({prof['n_requests']} requests in "
+          f"{prof['duration_s']:.1f}s)")
+    if args.json:
+        args.json.parent.mkdir(parents=True, exist_ok=True)
+        args.json.write_text(json.dumps(rec, indent=2))
+        print(f"serve_chaos: wrote {args.json}")
+
+    ok = True
+    if prof["hung_futures"]:
+        print(f"serve_chaos: FAIL {prof['hung_futures']} futures never "
+              "resolved (the zero-hung-futures invariant)",
+              file=sys.stderr)
+        ok = False
+    if prof["untyped_errors"]:
+        print(f"serve_chaos: FAIL {prof['untyped_errors']} futures "
+              "failed with non-typed errors", file=sys.stderr)
+        ok = False
+    if prof["faults_pending"]:
+        print(f"serve_chaos: FAIL {prof['faults_pending']} scheduled "
+              "faults never fired (soak too short for the schedule "
+              "horizon)", file=sys.stderr)
+        ok = False
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

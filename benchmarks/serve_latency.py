@@ -204,23 +204,30 @@ def replay_closed(server: ASAServer, events, concurrency: int) -> dict:
 
 def restart_check(server: ASAServer, cfg: ServeConfig, tenants: int,
                   mesh=None) -> bool:
-    """Snapshot → restore → every tenant's decision bitwise-identical."""
+    """Snapshot → restore → every tenant's decision bitwise-identical.
+
+    Runs both servers threaded (``stop()`` now rejects submissions into
+    a dead loop, and a stopped server restarts cleanly).  The probes are
+    decide-only — pure table reads — so batch composition can differ
+    between the two loops without touching bitwise equality."""
     server.save(step=999)
     restored = ASAServer.restore(cfg, step=999, mesh=mesh)
+    server.start()
+    restored.start()
     ok = True
-    for batch_start in range(0, tenants, cfg.batch_size):
-        ts = range(batch_start, min(batch_start + cfg.batch_size, tenants))
-        fa = [server.submit(t) for t in ts]
-        fb = [restored.submit(t) for t in ts]
-        server.step_once(wait_s=0)
-        restored.step_once(wait_s=0)
+    try:
+        fa = [server.submit(t) for t in range(tenants)]
+        fb = [restored.submit(t) for t in range(tenants)]
         for a, b in zip(fa, fb):
-            da, db = a.result(timeout=60), b.result(timeout=60)
+            da, db = a.result(timeout=300), b.result(timeout=300)
             if (da.lead_s, da.expected_s, da.entropy) != \
                     (db.lead_s, db.expected_s, db.entropy):
                 print(f"restart_check: tenant {da.tenant} diverged: "
                       f"{da} vs {db}")
                 ok = False
+    finally:
+        server.stop()
+        restored.stop()
     return ok
 
 

@@ -104,17 +104,33 @@ class Counter(_Metric):
 
 
 class Gauge(_Metric):
-    """A value that goes both ways (queue depth, tenants, free slots)."""
+    """A value that goes both ways (queue depth, tenants, free slots).
+
+    A gauge can instead be **fn-backed** (``set_fn``): the value is
+    computed by a callback at snapshot/scrape time rather than pushed by
+    the hot path — right for derived freshness signals like
+    last-batch-age, where the interesting value keeps changing while the
+    loop is *not* running.  The callback must be cheap and must never
+    raise; a raising callback reads as 0.0 rather than killing a scrape.
+    """
 
     kind = "gauge"
 
     def __init__(self, name: str, help: str = "") -> None:
         super().__init__(name, help)
         self._value = 0.0
+        self._fn = None
 
     def set(self, v: float) -> None:
         with self._lock:
+            self._fn = None
             self._value = v
+
+    def set_fn(self, fn) -> None:
+        """Back the gauge with ``fn() -> float``, evaluated per snapshot
+        (``set`` reverts to a plain pushed gauge)."""
+        with self._lock:
+            self._fn = fn
 
     def inc(self, n: float = 1) -> None:
         with self._lock:
@@ -126,9 +142,15 @@ class Gauge(_Metric):
 
     @property
     def value(self) -> float:
-        return self._value
+        return self.snapshot()
 
     def snapshot(self) -> float:
+        fn = self._fn
+        if fn is not None:
+            try:
+                return float(fn())
+            except Exception:
+                return 0.0
         return self._value
 
 

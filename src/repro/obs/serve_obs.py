@@ -87,6 +87,26 @@ def serve_registry() -> Registry:
     c("asa_serve_checkpoints_total", "cadenced async snapshots started")
     c("asa_serve_checkpoint_stall_seconds_total",
       "serve-loop seconds spent collecting previous checkpoint handles")
+    c("asa_serve_checkpoint_failures_total",
+      "cadenced checkpoint saves that failed (contained; serving continues)")
+    c("asa_serve_step_errors_total",
+      "jitted decision steps that failed (batch futures got ServeStepError)")
+    c("asa_serve_shed_total", "requests shed before dispatch (any reason)")
+    c("asa_serve_shed_expired_total",
+      "requests shed at batch-form: deadline already passed")
+    c("asa_serve_shed_queue_full_total",
+      "requests shed at submit: bounded ingress queue full")
+    c("asa_serve_lease_evictions_total",
+      "idle tenants evicted by pool-lease LRU under table pressure")
+    c("asa_serve_crashes_total", "serve-loop crashes (loop thread died)")
+    c("asa_serve_restarts_total",
+      "supervised restarts from the latest verified checkpoint")
+    c("asa_serve_stop_drained_total",
+      "queued/deferred requests failed with ServerStopped at stop()")
+    g("asa_serve_loop_healthy",
+      "1 while the serve loop thread is running, 0 after crash/stop")
+    g("asa_serve_last_batch_age_seconds",
+      "seconds since the loop last dispatched a batch (watchdog)")
     g("asa_serve_tenants", "admitted tenants (occupied slots)")
     g("asa_serve_free_slots", "unoccupied tenant slots")
     g("asa_serve_deferred", "requests parked in the deferred deque")
@@ -132,6 +152,21 @@ class ServeObs:
         self.c_checkpoints = g.counter("asa_serve_checkpoints_total")
         self.c_ckpt_stall_s = g.counter(
             "asa_serve_checkpoint_stall_seconds_total")
+        self.c_ckpt_failures = g.counter(
+            "asa_serve_checkpoint_failures_total")
+        self.c_step_errors = g.counter("asa_serve_step_errors_total")
+        self.c_shed = g.counter("asa_serve_shed_total")
+        self.c_shed_expired = g.counter("asa_serve_shed_expired_total")
+        self.c_shed_queue_full = g.counter(
+            "asa_serve_shed_queue_full_total")
+        self.c_lease_evictions = g.counter(
+            "asa_serve_lease_evictions_total")
+        self.c_crashes = g.counter("asa_serve_crashes_total")
+        self.c_restarts = g.counter("asa_serve_restarts_total")
+        self.c_stop_drained = g.counter("asa_serve_stop_drained_total")
+        self.g_loop_healthy = g.gauge("asa_serve_loop_healthy")
+        self.g_last_batch_age = g.gauge(
+            "asa_serve_last_batch_age_seconds")
         self.g_tenants = g.gauge("asa_serve_tenants")
         self.g_free_slots = g.gauge("asa_serve_free_slots")
         self.g_deferred = g.gauge("asa_serve_deferred")

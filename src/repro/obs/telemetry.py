@@ -11,7 +11,7 @@ Schema v1 (a "record"):
     {
       "telemetry_version": 1,
       "kind": "xsim_throughput" | "xsim_strategies" | "rl_train"
-              | "serve_latency" | "serve_metrics",
+              | "serve_latency" | "serve_metrics" | "serve_chaos",
       "run": {...},        # runner identity: label/config/flags
       "profile": {...},    # timing: compile_s, steady_s, scenarios_per_sec,
                            #         us_per_scenario, (trace_overhead_frac)
@@ -34,7 +34,7 @@ from typing import Any
 TELEMETRY_VERSION = 1
 
 KINDS = ("xsim_throughput", "xsim_strategies", "rl_train",
-         "serve_latency", "serve_metrics")
+         "serve_latency", "serve_metrics", "serve_chaos")
 
 # sections a record of each kind must carry ("trace" may be None but the
 # key itself must exist — it says "tracing was off", not "schema unknown")
@@ -48,6 +48,10 @@ REQUIRED_SECTIONS: dict[str, tuple[str, ...]] = {
     # --metrics-json): profile carries the batching-health rates the
     # gate consumes, metrics the raw obs.registry snapshot
     "serve_metrics": _SECTIONS,
+    # chaos soak (benchmarks/serve_chaos.py): profile carries fault
+    # recovery percentiles + the zero-hung-futures invariant the gate
+    # enforces, metrics the final obs.registry snapshot
+    "serve_chaos": _SECTIONS,
 }
 
 WARNING_PREFIX = "warning: "
@@ -63,6 +67,11 @@ SERVE_PROFILE_REQUIRED = ("p50_ms", "p99_ms", "decisions_per_sec")
 # fraction of dispatched rows that were padding, fraction of requests
 # the dedup batcher deferred)
 SERVE_METRICS_PROFILE_REQUIRED = ("pad_fraction", "defer_rate")
+
+# profile keys a serve_chaos record must carry: p99 seconds from fault
+# injection to next successful resolve, count of futures never resolved
+# (the invariant: must be 0), and shed requests / submitted requests
+CHAOS_PROFILE_REQUIRED = ("recovery_p99_ms", "hung_futures", "shed_rate")
 
 
 def is_warning(msg: str) -> bool:
@@ -142,6 +151,10 @@ def validate(rec: Any) -> list[str]:
         for k in SERVE_METRICS_PROFILE_REQUIRED:
             if k not in prof:
                 errs.append(f"profile missing {k!r}")
+    if kind == "serve_chaos" and isinstance(prof, dict):
+        for k in CHAOS_PROFILE_REQUIRED:
+            if k not in prof:
+                errs.append(f"profile missing {k!r}")
     return errs
 
 
@@ -213,6 +226,34 @@ def serve_metrics_leg(rec: dict[str, Any]) -> dict[str, Any]:
               "asa_serve_failed_total", "asa_serve_deferrals_total",
               "asa_serve_evictions_total",
               "asa_serve_evicted_requests_total"):
+        if k in snap:
+            leg[k] = snap[k]
+    return leg
+
+
+def serve_chaos_leg(rec: dict[str, Any]) -> dict[str, Any]:
+    """Flatten a serve_chaos record (the chaos soak) into bench_gate's
+    leg view: the gated profile (recovery_p99_ms, hung_futures,
+    shed_rate, plus whatever else the soak reports) and the headline
+    fault/recovery counters from the final registry snapshot."""
+    errs = hard_errors(validate(rec))
+    if errs:
+        raise ValueError("; ".join(errs))
+    if rec.get("kind") != "serve_chaos":
+        raise ValueError(f"kind is {rec.get('kind')!r}, "
+                         "expected 'serve_chaos'")
+    run, prof = rec["run"], rec["profile"]
+    leg = dict(prof)
+    leg["label"] = run.get("label", "")
+    for k in ("seed", "n_tenants", "max_queue", "duration_s"):
+        if k in run:
+            leg[k] = run[k]
+    snap = rec.get("metrics") or {}
+    for k in ("asa_serve_step_errors_total", "asa_serve_crashes_total",
+              "asa_serve_restarts_total", "asa_serve_shed_total",
+              "asa_serve_lease_evictions_total",
+              "asa_serve_checkpoint_failures_total",
+              "asa_serve_stop_drained_total"):
         if k in snap:
             leg[k] = snap[k]
     return leg

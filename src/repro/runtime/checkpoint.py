@@ -26,6 +26,12 @@ container scale by the tests):
     ``AsyncSave`` handle whose ``result()``/``join()`` RE-RAISE any
     background failure: a failed save must surface in the caller, not
     report success while the "latest" checkpoint silently stays stale.
+  * integrity: the manifest records a CRC32 per leaf payload.  ``restore``
+    verifies and raises :class:`CheckpointCorruptError` on mismatch (or a
+    missing leaf file), and ``latest_step(..., verified=True)`` returns the
+    newest step that passes ``verify_step`` — a torn or bit-rotted latest
+    snapshot degrades to the previous good one instead of poisoning
+    restore.  Pre-CRC manifests verify structurally only (files present).
 """
 
 from __future__ import annotations
@@ -42,6 +48,13 @@ try:
     import zstandard
 except ModuleNotFoundError:
     zstandard = None
+
+
+class CheckpointCorruptError(RuntimeError):
+    """A checkpoint failed integrity verification (CRC mismatch, missing
+    leaf file, or an unreadable manifest).  ``latest_step(verified=True)``
+    exists so callers can fall back to the previous good step instead of
+    dying on this."""
 
 
 def _compressor(level: int):
@@ -100,6 +113,10 @@ def save(tree, directory: str | Path, step: int, *, level: int = 3) -> Path:
         (tmp / f"{name}.bin").write_bytes(payload)
         manifest["leaves"].append({
             "name": name, "shape": list(arr.shape), "dtype": str(arr.dtype),
+            # integrity: CRC of the compressed payload as written — what
+            # verify_step/restore re-hash straight off disk, no decompress
+            "crc32": zlib.crc32(payload) & 0xFFFFFFFF,
+            "nbytes": len(payload),
         })
     # atomic publish: manifest written into tmp, then dir renamed
     (tmp / "manifest.json").write_text(json.dumps(manifest))
@@ -165,7 +182,42 @@ def save_async(tree, directory: str | Path, step: int, *,
     return handle
 
 
-def latest_step(directory: str | Path) -> int | None:
+def verify_step(directory: str | Path, step: int) -> list[str]:
+    """Integrity-check one published checkpoint; returns the violations
+    (empty ⇒ verified).  Checks: manifest readable, every leaf file
+    present, and — for manifests that carry per-leaf CRCs — each payload
+    hashes to its recorded ``crc32``.  Pre-CRC manifests verify
+    structurally only (the files exist)."""
+    d = Path(directory) / f"step_{step}"
+    try:
+        manifest = json.loads((d / "manifest.json").read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"step {step}: unreadable manifest: {e}"]
+    errs: list[str] = []
+    for meta in manifest.get("leaves", []):
+        name = meta.get("name", "?")
+        path = d / f"{name}.bin"
+        try:
+            payload = path.read_bytes()
+        except OSError as e:
+            errs.append(f"step {step}: leaf {name!r} unreadable: {e}")
+            continue
+        want = meta.get("crc32")
+        if want is None:
+            continue  # pre-CRC checkpoint: presence is all we can check
+        got = zlib.crc32(payload) & 0xFFFFFFFF
+        if got != int(want):
+            errs.append(f"step {step}: leaf {name!r} CRC mismatch "
+                        f"(manifest {int(want):#010x}, disk {got:#010x})")
+    return errs
+
+
+def latest_step(directory: str | Path,
+                verified: bool = False) -> int | None:
+    """Newest published step (manifest present).  With ``verified=True``
+    steps are scanned newest-first and the first one passing
+    :func:`verify_step` wins — a torn/corrupted latest snapshot degrades
+    to the previous good one instead of being handed to ``restore``."""
     directory = Path(directory)
     if not directory.exists():
         return None
@@ -176,7 +228,12 @@ def latest_step(directory: str | Path) -> int | None:
                 steps.append(int(d.name.split("_")[1]))
             except ValueError:
                 continue
-    return max(steps) if steps else None
+    if not verified:
+        return max(steps) if steps else None
+    for step in sorted(steps, reverse=True):
+        if not verify_step(directory, step):
+            return step
+    return None
 
 
 def restore(example_tree, directory: str | Path, step: int,
@@ -185,7 +242,11 @@ def restore(example_tree, directory: str | Path, step: int,
     (a matching pytree of NamedShardings) is given, leaves are placed
     sharded — onto whatever mesh those shardings reference (elastic)."""
     directory = Path(directory) / f"step_{step}"
-    manifest = json.loads((directory / "manifest.json").read_text())
+    try:
+        manifest = json.loads((directory / "manifest.json").read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        raise CheckpointCorruptError(
+            f"step {step}: unreadable manifest: {e}") from e
     codec = manifest.get("codec", "zstd")  # pre-codec checkpoints were zstd
     by_name = {m["name"]: m for m in manifest["leaves"]}
     leaves, treedef = _leaf_paths(example_tree)
@@ -194,7 +255,21 @@ def restore(example_tree, directory: str | Path, step: int,
     out = []
     for (name, leaf), sh in zip(leaves, shard_leaves):
         meta = by_name[name]
-        raw = _decompress(codec, (directory / f"{name}.bin").read_bytes())
+        try:
+            payload = (directory / f"{name}.bin").read_bytes()
+        except OSError as e:
+            raise CheckpointCorruptError(
+                f"step {step}: leaf {name!r} unreadable: {e}") from e
+        want = meta.get("crc32")
+        if want is not None:
+            got = zlib.crc32(payload) & 0xFFFFFFFF
+            if got != int(want):
+                raise CheckpointCorruptError(
+                    f"step {step}: leaf {name!r} CRC mismatch (manifest "
+                    f"{int(want):#010x}, disk {got:#010x}); use "
+                    f"latest_step(verified=True) to fall back to the "
+                    f"newest verified step")
+        raw = _decompress(codec, payload)
         arr = np.frombuffer(raw, dtype=np.dtype(meta["dtype"])).reshape(
             meta["shape"]).copy()
         if sh is not None:

@@ -22,6 +22,13 @@ Allocations may carry an ``expires_at`` walltime (batch jobs end):
 revoking its claims through the normal ``on_revoke`` path.  ``claim`` and
 ``available`` accept an optional ``now`` that sweeps first, so expired
 inventory is never claimable.
+
+Claims may carry an ``expires_at`` of their own — a **lease**: the holder
+must keep renewing (``renew``) or ``sweep_expired(now)`` lapses the claim
+exactly as an allocation failure would (slices returned, ``on_revoke``
+fired).  This is the substrate for idle-LRU policies: the serving loop
+leases one table slot per tenant and refreshes the lease on every
+request, so a sweep revokes precisely the tenants that went cold.
 """
 
 from __future__ import annotations
@@ -47,6 +54,9 @@ class Claim:
     # exact per-allocation breakdown of the claim — release/revoke give
     # back precisely what each allocation contributed
     alloc_slices: dict[int, int] = field(default_factory=dict)
+    # lease deadline: sweep_expired(now >= expires_at) revokes the claim;
+    # None = held until released/revoked (the pre-lease behavior)
+    expires_at: Optional[float] = None
 
     @property
     def alloc_ids(self) -> list[int]:
@@ -91,18 +101,31 @@ class ResourcePool:
         return hit
 
     def sweep_expired(self, now: float) -> list[Claim]:
-        """Lapse every allocation whose ``expires_at`` has passed.
+        """Lapse every allocation AND every claim lease past its deadline.
 
         The batch system reclaimed those nodes whether we noticed or not;
         this makes the pool notice: each expired allocation leaves the
         inventory and its claims are revoked through ``on_revoke`` exactly
-        as a failure would.  Returns the revoked claims.
+        as a failure would.  Expired claim leases (``Claim.expires_at``)
+        are then revoked the same way — slices returned to their
+        allocations, ``on_revoke`` fired once.  Returns the revoked
+        claims (allocation-driven first, then lapsed leases, oldest
+        deadline first — a deterministic idle-LRU order).
         """
         expired = [a.id for a in self._allocs.values()
                    if a.expires_at is not None and a.expires_at <= now]
         revoked: list[Claim] = []
         for aid in expired:
             revoked.extend(self.remove_allocation(aid))
+        lapsed = sorted((c for c in self._claims.values()
+                         if c.expires_at is not None
+                         and c.expires_at <= now),
+                        key=lambda c: (c.expires_at, c.id))
+        for c in lapsed:
+            self.release(c)
+            for cb in self.on_revoke:
+                cb(c)
+            revoked.append(c)
         return revoked
 
     # ------------------------------------------------------------- demand
@@ -113,9 +136,11 @@ class ResourcePool:
             a.slices - self._claimed_per_alloc.get(a.id, 0)
             for a in self._allocs.values() if a.healthy)
 
-    def claim(self, slices: int,
-              now: Optional[float] = None) -> Optional[Claim]:
-        """First-fit claim across allocations (may span several)."""
+    def claim(self, slices: int, now: Optional[float] = None,
+              expires_at: Optional[float] = None) -> Optional[Claim]:
+        """First-fit claim across allocations (may span several).
+        ``expires_at`` makes it a lease: renew it or the next
+        ``sweep_expired`` past the deadline revokes it."""
         if now is not None:
             self.sweep_expired(now)
         if slices > self.available():
@@ -133,9 +158,20 @@ class ResourcePool:
                 remaining -= take
             if remaining == 0:
                 break
-        c = Claim(next(self._ids), slices, used)
+        c = Claim(next(self._ids), slices, used, expires_at=expires_at)
         self._claims[c.id] = c
         return c
+
+    def renew(self, claim: Claim,
+              expires_at: Optional[float]) -> bool:
+        """Push a live lease's deadline (``None`` clears it); returns
+        False when the claim is already dead — the holder learns its
+        lease lapsed instead of writing to a ghost."""
+        live = self._claims.get(claim.id)
+        if live is None:
+            return False
+        live.expires_at = expires_at
+        return True
 
     def release(self, claim: Claim) -> None:
         if claim.id not in self._claims:

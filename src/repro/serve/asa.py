@@ -50,6 +50,20 @@ from repro.core import asa
 from repro.core.bins import make_bins
 
 
+class ServeStepError(RuntimeError):
+    """One batch's jitted decision step failed.
+
+    The serve loop raises this INTO the batch's futures — containment is
+    per batch, the loop itself survives (``__cause__`` carries the device
+    exception; ``batch`` the dispatched-batch index).  Clients retry; the
+    tenant table holds its pre-dispatch state when the failure happened
+    at dispatch (the functional update never landed)."""
+
+    def __init__(self, msg: str, *, batch: int = -1):
+        super().__init__(msg)
+        self.batch = batch
+
+
 class QueryBatch(NamedTuple):
     """One padded batch of tenant queries (all leaves shaped (B,))."""
 

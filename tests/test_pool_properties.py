@@ -123,6 +123,50 @@ def test_claim_at_now_skips_expired_but_uses_live():
     _assert_consistent(pool)
 
 
+# ----------------------------------------------------------------- leases
+def test_leased_claim_lapses_on_sweep_and_revokes():
+    pool = ResourcePool()
+    pool.add_allocation(4)
+    c = pool.claim(2, expires_at=10.0)
+    keep = pool.claim(2)                 # no lease: never swept
+    revoked = []
+    pool.on_revoke.append(lambda cl: revoked.append(cl.id))
+    assert pool.sweep_expired(9.9) == []
+    lapsed = pool.sweep_expired(10.0)    # deadline inclusive
+    assert [cl.id for cl in lapsed] == [c.id]
+    assert revoked == [c.id]
+    _assert_consistent(pool)
+    assert pool.available() == 2         # the lease's slices came back
+    assert keep.id in pool._claims
+
+
+def test_renew_pushes_the_deadline_and_reports_dead_leases():
+    pool = ResourcePool()
+    pool.add_allocation(2)
+    c = pool.claim(1, expires_at=10.0)
+    assert pool.renew(c, 100.0) is True
+    assert pool.sweep_expired(50.0) == []   # renewed past the sweep
+    pool.release(c)
+    assert pool.renew(c, 200.0) is False    # dead claims say so
+    _assert_consistent(pool)
+
+
+def test_sweep_lapses_leases_in_deadline_then_id_order():
+    """(expires_at, id) order is the serving layer's idle-LRU: the
+    coldest lease lapses first, ties break on claim id."""
+    pool = ResourcePool()
+    pool.add_allocation(8)
+    c_late = pool.claim(1, expires_at=30.0)
+    c_early = pool.claim(1, expires_at=10.0)
+    c_tie_a = pool.claim(1, expires_at=20.0)
+    c_tie_b = pool.claim(1, expires_at=20.0)
+    lapsed = pool.sweep_expired(40.0)
+    assert [cl.id for cl in lapsed] == \
+        [c_early.id, c_tie_a.id, c_tie_b.id, c_late.id]
+    _assert_consistent(pool)
+    assert pool.available() == 8
+
+
 # --------------------------------------------------------------- property
 @settings(max_examples=60, deadline=None)
 @given(st.integers(min_value=0, max_value=10**9))
